@@ -1,0 +1,60 @@
+"""Table I — detection performance: proposed vs ACFL vs FedL2P (+ random).
+
+Paper reports (UNSW-NB15): ACFL 87.8%/0.86/760s, FedL2P 92.1%/0.91/600s,
+Proposed 94.8%/0.93/570s; (ROAD): 83.3/0.81/905, 88.7/0.86/710, 90.3/0.88/680.
+
+On the synthetic stand-ins we validate the paper's *relative* claims:
+  (1) accuracy ordering Proposed > FedL2P > ACFL on both datasets,
+  (2) the training-time metric — time-to-target-accuracy — is lowest for
+      Proposed (its utility score prefers fast, clean clients; ACFL's
+      loss-seeking picks the corrupted ones; FedL2P pays personalisation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ROUNDS, run_grid
+
+METHODS = ("acfl", "fedl2p", "proposed", "random")
+DATASETS = ("unsw", "road")
+ACC_TARGET = {"unsw": 0.85, "road": 0.60}
+
+
+def _tta(row, target):
+    for t, a in zip(row["history"].get("cum_time", []),
+                    row["history"].get("acc", [])):
+        if a >= target:
+            return t
+    return float("inf")
+
+
+def run(csv_rows: list):
+    rows = run_grid(METHODS, DATASETS)
+    print("\n== Table I: method comparison (means over seeds) ==")
+    print(f"{'dataset':8s} {'method':12s} {'acc%':>7s} {'auc':>7s} "
+          f"{'t_total(s)':>11s} {'t->target(s)':>13s}")
+    summary = {}
+    for ds in DATASETS:
+        for m in METHODS:
+            sel = [r for r in rows if r["method"] == m and r["dataset"] == ds]
+            acc = float(np.mean([r["accuracy"] for r in sel])) * 100
+            auc = float(np.mean([r["auc"] for r in sel]))
+            t = float(np.mean([r["sim_time_s"] for r in sel]))
+            ttas = [_tta(r, ACC_TARGET[ds]) for r in sel]
+            tta = float(np.mean([x for x in ttas if np.isfinite(x)] or [np.inf]))
+            summary[(ds, m)] = (acc, auc, t, tta)
+            print(f"{ds:8s} {m:12s} {acc:7.1f} {auc:7.3f} {t:11.1f} {tta:13.1f}")
+            csv_rows.append((f"table1/{ds}/{m}/acc_pct", t * 1e6 / ROUNDS, acc))
+            csv_rows.append((f"table1/{ds}/{m}/auc", tta * 1e6, auc))
+    for ds in DATASETS:
+        order_ok = (summary[(ds, "proposed")][0] > summary[(ds, "fedl2p")][0]
+                    > summary[(ds, "acfl")][0])
+        faster = summary[(ds, "proposed")][3] <= min(
+            summary[(ds, "fedl2p")][3], summary[(ds, "acfl")][3])
+        print(f"claim[{ds}]: acc ordering proposed>fedl2p>acfl -> {order_ok}; "
+              f"proposed fastest to {ACC_TARGET[ds]*100:.0f}% acc -> {faster}")
+    return rows
+
+
+if __name__ == "__main__":
+    run([])

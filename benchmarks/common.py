@@ -1,0 +1,111 @@
+"""Shared experiment harness for the paper-table benchmarks.
+
+Runs (method × dataset × seed) FL trainings once and caches RunResults in
+``benchmarks/artifacts/fl_results.json`` so Tables I/II/III and Fig. 3 reuse
+the same trials (the paper also reports means over 10 repeated trials).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.train.fl_driver import RunResult, run_fl
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+CACHE = os.path.join(ARTIFACT_DIR, "fl_results.json")
+
+# Scaled-down defaults so the whole suite runs in CPU-minutes; the paper's
+# full setting (40 clients, 200 rounds, 10 trials) is reachable via env var
+# REPRO_FULL=1.
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+N_CLIENTS = 40 if FULL else 24
+ROUNDS = 200 if FULL else 50
+N_SEEDS = 10 if FULL else 5
+N_SAMPLES = {"unsw": 20_000 if FULL else 8_000, "road": 5_000 if FULL else 2_400}
+
+
+def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
+    cfg = FLConfig(
+        n_clients=n_clients,
+        clients_per_round=max(4, n_clients // 5),
+        rounds=ROUNDS,
+        local_epochs=5,
+        local_batch=32,
+        local_lr=0.08,
+        dp_enabled=True,
+        dp_mode="clipped",
+        # per-round budget in the regime where training still learns (see
+        # EXPERIMENTS.md: the paper's eps∈[0.1,10] labels are only consistent
+        # with a much weaker mechanism); composed eps reported via RDP.
+        dp_epsilon=1000.0,
+        dp_delta=1e-5,
+        dp_clip=1.0,
+        fault_tolerance=True,
+        failure_prob=0.05,
+    )
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _key(method, dataset, seed, tag):
+    return f"{method}|{dataset}|{seed}|{tag}"
+
+
+def _load() -> Dict[str, dict]:
+    if os.path.exists(CACHE):
+        with open(CACHE) as f:
+            return json.load(f)
+    return {}
+
+
+def _save(cache: Dict[str, dict]):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    with open(CACHE, "w") as f:
+        json.dump(cache, f, indent=1)
+
+
+_FEDS: Dict[str, object] = {}
+
+
+def get_fed(dataset: str, seed: int = 0):
+    k = f"{dataset}|{seed}"
+    if k not in _FEDS:
+        _FEDS[k] = make_federated(seed, dataset, n_samples=N_SAMPLES[dataset],
+                                  n_clients=N_CLIENTS, alpha=0.2,
+                                  label_noise_frac=0.3, label_noise_rate=0.5)
+    return _FEDS[k]
+
+
+def run_cached(method: str, dataset: str, seed: int, fl: Optional[FLConfig] = None,
+               tag: str = "default", rounds: Optional[int] = None) -> dict:
+    cache = _load()
+    key = _key(method, dataset, seed, tag)
+    if key in cache:
+        return cache[key]
+    fed = get_fed(dataset, seed=0)  # same federation across seeds; seed varies FL
+    res = run_fl(fed, fl or base_fl(), method, seed=seed,
+                 rounds=rounds or ROUNDS, dataset=dataset)
+    d = dataclasses.asdict(res)
+    cache[key] = d
+    _save(cache)
+    return d
+
+
+def run_grid(methods: Sequence[str], datasets: Sequence[str],
+             seeds: Sequence[int] = None, fl: Optional[FLConfig] = None,
+             tag: str = "default") -> List[dict]:
+    seeds = seeds if seeds is not None else list(range(N_SEEDS))
+    out = []
+    for ds in datasets:
+        for m in methods:
+            for s in seeds:
+                out.append(run_cached(m, ds, s, fl=fl, tag=tag))
+    return out
+
+
+def mean_of(rows: List[dict], method: str, dataset: str, field: str) -> float:
+    vals = [r[field] for r in rows if r["method"] == method and r["dataset"] == dataset]
+    return sum(vals) / max(len(vals), 1)

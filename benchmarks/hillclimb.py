@@ -1,0 +1,111 @@
+"""Reproduce the §Perf hillclimb iterations (EXPERIMENTS.md) as tagged
+dry-run artifacts.  Each variant re-lowers + compiles the pair and prints
+the corrected roofline terms next to its baseline.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.hillclimb [--pair A|B|C|all]
+
+(Each compile is ~10-90s on the CPU host; ~15 compiles for --pair all.)
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+
+
+def _terms(r):
+    prod = (r["meta"].get("scan") or {}).get("product", 1.0)
+    return (
+        r["cost"]["flops"] * prod / 197e12,
+        r["cost"]["bytes_accessed"] * prod / 819e9,
+        r["collectives"]["total"] * prod / 50e9,
+        (r["memory"]["temp_bytes"] or 0) / 2**30,
+    )
+
+
+def show(tag, r):
+    c, m, x, t = _terms(r)
+    print(f"  {tag:28s} C={c:8.2f}s M={m:8.2f}s X={x:8.2f}s temp={t:7.2f}GiB")
+
+
+def pair_a():
+    """mistral-123B × train_4k — the FL round at max dense scale."""
+    from repro.launch.dryrun import run_one
+    from repro.models.sharding import make_rules
+
+    print("== Pair A: mistral_large_123b x train_4k ==")
+    show("baseline ga16", run_one("mistral_large_123b", "train_4k", "single",
+                                  tag="rebase"))
+    seqpar = dict(make_rules("client_serial", False))
+    seqpar["act_seq"] = ("model",)
+    show("A1 seq-parallel", run_one("mistral_large_123b", "train_4k", "single",
+                                    step_kw={"rules_override": seqpar},
+                                    tag="seqpar"))
+    for ga in (8, 4):
+        show(f"A2 ga={ga}", run_one("mistral_large_123b", "train_4k", "single",
+                                    step_kw={"grad_accum": ga}, tag=f"ga{ga}"))
+    show("A3 ga8+dots", run_one("mistral_large_123b", "train_4k", "single",
+                                step_kw={"grad_accum": 8, "remat": "dots"},
+                                tag="ga8dots"))
+    show("A4 remat_group=8", run_one("mistral_large_123b", "train_4k", "single",
+                                     step_kw={"remat_group": 8}, tag="grp8"))
+    print("  A6 (S² score buffers; flash-kernel fit argument): see "
+          "EXPERIMENTS.md §Perf — probed via seq sweeps.")
+
+
+def pair_b():
+    """mamba2-130m × decode_32k — most collective-bound."""
+    from repro.launch.dryrun import run_one
+
+    print("== Pair B: mamba2_130m x decode_32k ==")
+    show("baseline (heads)", run_one("mamba2_130m", "decode_32k", "single",
+                                     step_kw={"ssm_shard": "heads"},
+                                     tag="heads"))
+    show("B1 ssm_shard=state", run_one("mamba2_130m", "decode_32k", "single",
+                                       step_kw={"ssm_shard": "state"},
+                                       tag="ssmstate"))
+    rules = {"embed": None, "mlp": None, "heads": None, "kv": None,
+             "vocab": None, "experts": None, "layers": None,
+             "act_batch": ("data",), "act_seq": None, "ssm_state": None}
+    show("B2 replicated weights", run_one(
+        "mamba2_130m", "decode_32k", "single",
+        step_kw={"ssm_shard": "state", "rules_override": rules},
+        tag="replicated"))
+    show("B3 conv replicated", run_one(
+        "mamba2_130m", "decode_32k", "single",
+        step_kw={"ssm_shard": "state_convrep"}, tag="stateconvrep"))
+
+
+def pair_c():
+    """llama4-400B × train_4k — worst roofline fraction."""
+    from repro.launch.dryrun import run_one
+    from repro.models import transformer as T
+
+    print("== Pair C: llama4_maverick_400b x train_4k ==")
+    show("baseline einsum MoE", run_one("llama4_maverick_400b", "train_4k",
+                                        "single", tag="rebase"))
+    T.MOE_IMPL[0] = "scatter"
+    try:
+        show("C1 scatter dispatch", run_one("llama4_maverick_400b", "train_4k",
+                                            "single", tag="scatter"))
+    finally:
+        T.MOE_IMPL[0] = "einsum"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", choices=["A", "B", "C", "all"], default="all")
+    args = ap.parse_args()
+    if args.pair in ("A", "all"):
+        pair_a()
+    if args.pair in ("B", "all"):
+        pair_b()
+    if args.pair in ("C", "all"):
+        pair_c()
+
+
+if __name__ == "__main__":
+    main()

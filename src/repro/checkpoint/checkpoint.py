@@ -1,0 +1,135 @@
+"""Pytree checkpointing (binary, dependency-free) + Weibull-driven cadence.
+
+The paper's fault-tolerance mechanism stores client model state as binary
+files at interval t_c* (derived in ``core/fault.py``).  This module is the
+substrate: flatten a pytree to a single ``.npz`` with '/'-joined key paths,
+a JSON manifest, atomic rename, and restore-latest with integrity checks.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> str:
+    """Atomic save of a pytree to <path>.npz (+ sidecar manifest)."""
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(suffix=".npz", dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp, **flat)
+    final = path if path.endswith(".npz") else path + ".npz"
+    shutil.move(tmp, final)
+    manifest = {
+        "keys": sorted(flat),
+        "time": time.time(),
+        "nbytes": int(sum(v.nbytes for v in flat.values())),
+        "metadata": metadata or {},
+    }
+    with open(final + ".json", "w") as f:
+        json.dump(manifest, f)
+    return final
+
+
+def load_flat(path: str) -> Dict[str, np.ndarray]:
+    final = path if path.endswith(".npz") else path + ".npz"
+    with np.load(final) as z:
+        return {k: z[k] for k in z.files}
+
+
+def restore_pytree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    flat = load_flat(path)
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths_leaves:
+        key = "/".join(_path_str(x) for x in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        if hasattr(leaf, "dtype"):
+            want = np.dtype(leaf.dtype)
+            if arr.dtype.kind == "V":  # npz stores ml_dtypes (bf16, ...) as raw void
+                arr = arr.view(want)
+            else:
+                arr = arr.astype(want)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    """Rotating checkpoint directory with restore-latest.
+
+    ``interval_rounds`` usually comes from
+    ``core.fault.optimal_checkpoint_interval`` divided by the measured
+    per-round wall time (the driver wires that up).
+    """
+
+    def __init__(self, directory: str, keep: int = 3, interval_rounds: int = 1):
+        self.dir = directory
+        self.keep = keep
+        self.interval = max(int(interval_rounds), 1)
+        self.saves = 0
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, round_idx: int, tree, metadata=None) -> Optional[str]:
+        if round_idx % self.interval:
+            return None
+        path = os.path.join(self.dir, f"ckpt_{round_idx:08d}")
+        out = save_pytree(path, tree, {"round": round_idx, **(metadata or {})})
+        self.saves += 1
+        self._gc()
+        return out
+
+    def _gc(self):
+        ckpts = sorted(self._list())
+        for r, p in ckpts[: -self.keep]:
+            for ext in ("", ".json"):
+                try:
+                    os.remove(p + ext)
+                except OSError:
+                    pass
+
+    def _list(self):
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append((int(f[5:13]), os.path.join(self.dir, f)))
+        return out
+
+    def latest(self) -> Optional[Tuple[int, str]]:
+        ckpts = sorted(self._list())
+        return ckpts[-1] if ckpts else None
+
+    def restore_latest(self, like):
+        latest = self.latest()
+        if latest is None:
+            return None, None
+        return latest[0], restore_pytree(latest[1], like)

@@ -1,0 +1,320 @@
+"""Configuration system for the repro framework.
+
+Every assigned architecture gets a module in ``repro/configs/<id>.py`` that
+exposes ``config() -> ModelConfig`` (the exact published spec) and
+``smoke_config() -> ModelConfig`` (a reduced variant of the same family used
+by CPU smoke tests: <=2 layers, d_model <= 512, <= 4 experts).
+
+Input shapes, mesh descriptions and FL hyper-parameters live here too so the
+launcher, the dry-run and the benchmarks all read one source of truth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description covering every assigned family."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- attention ---
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # None = full causal attention
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # VLM M-RoPE (t,h,w)
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    ssm_expand: int = 2
+    conv_width: int = 4
+
+    # --- hybrid (RecurrentGemma / Griffin) ---
+    # pattern of block kinds, tiled (with truncation) to n_layers,
+    # e.g. ("rec", "rec", "attn").
+    block_pattern: Optional[Tuple[str, ...]] = None
+    lru_width: int = 0  # RG-LRU recurrent width (0 -> d_model)
+
+    # --- encoder-decoder (audio) ---
+    enc_layers: int = 0  # 0 => decoder-only
+    enc_seq: int = 1024  # stub frontend: number of frame embeddings
+
+    # --- multimodal frontend stubs ---
+    frontend: str = "none"  # none | vision | audio
+    frontend_tokens: int = 0  # patch/frame embeddings prepended to the prompt
+
+    # --- misc ---
+    act: str = "swiglu"  # swiglu | geglu | gelu
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    long_context_variant: Optional[str] = None  # e.g. "swa-4096" for long_500k
+    source: str = ""  # citation for the spec
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def pattern(self) -> Tuple[str, ...]:
+        """Per-layer block kinds of length n_layers.
+
+        ``block_pattern`` takes priority (e.g. Llama-4's interleaved
+        dense/MoE), then family defaults.
+        """
+        if self.block_pattern:
+            reps = -(-self.n_layers // len(self.block_pattern))
+            return (self.block_pattern * reps)[: self.n_layers]
+        if self.family == "ssm":
+            return ("ssd",) * self.n_layers
+        if self.family == "moe":
+            return ("moe",) * self.n_layers
+        return ("attn",) * self.n_layers
+
+    def segments(self) -> Tuple[Tuple[Tuple[str, ...], int], ...]:
+        """Greedy decomposition of pattern() into (super-block, repeats).
+
+        A super-block is the smallest repeating unit; the trailing remainder
+        becomes its own segment.  Used to build per-segment scanned stacks.
+        """
+        pat = self.pattern()
+        if self.block_pattern:
+            unit = self.block_pattern
+            n_full = self.n_layers // len(unit)
+            segs = []
+            if n_full:
+                segs.append((tuple(unit), n_full))
+            rem = self.n_layers - n_full * len(unit)
+            if rem:
+                segs.append((tuple(pat[-rem:]), 1))
+            return tuple(segs)
+        return (((pat[0],), self.n_layers),)
+
+    def supports_long_context(self) -> bool:
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.long_context_variant is not None
+
+    def param_count(self) -> int:
+        """Approximate parameter count (reported, not load-bearing)."""
+        d, dff, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        attn = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) + (self.n_heads * hd) * d
+        mlp_mult = 3 if self.act in ("swiglu", "geglu") else 2
+        mlp = mlp_mult * d * dff
+        per_layer = 0
+        for kind in self.pattern():
+            if kind == "attn":
+                per_layer += attn + mlp
+            elif kind == "moe":
+                per_layer += attn + self.n_experts * mlp
+            elif kind == "ssd":
+                din = self.ssm_expand * d
+                per_layer += d * (2 * din + 2 * self.ssm_state) + din * d
+            elif kind == "rec":
+                w = self.lru_width or d
+                per_layer += 2 * d * w + w * d + 3 * w + mlp
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        enc = self.enc_layers * (attn + mlp) if self.enc_layers else 0
+        return per_layer + emb + enc
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, dff = self.d_model, self.d_ff
+        mlp_mult = 3 if self.act in ("swiglu", "geglu") else 2
+        full = self.param_count()
+        unused = (self.n_experts - self.experts_per_token) * mlp_mult * d * dff
+        n_moe_layers = sum(1 for k in self.pattern() if k == "moe")
+        return full - n_moe_layers * unused
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Federated-learning configuration (the paper's knobs)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    """Hyper-parameters of Algorithm 1 and its substrate."""
+
+    n_clients: int = 40
+    clients_per_round: int = 8          # K (initial value when adaptive)
+    adaptive_k: bool = True
+    k_min: int = 2
+    k_max: int = 0                      # 0 -> n_clients
+    rounds: int = 200
+    local_epochs: int = 5
+    local_batch: int = 64
+    local_lr: float = 0.05
+    selection: str = "adaptive_utility"  # see core/selection.py registry
+    # utility score weights: performance, data quality, compute capacity
+    alpha: float = 1.0                  # accuracy weight in F(S_t)
+    gamma: float = 0.1                  # cost weight in F(S_t)
+    utility_ema: float = 0.5
+    # update-coherence scoring (cos(Δ_i, Δ_agg) data-quality observable,
+    # DESIGN.md §4).  Costs one extra all-reduce of params-size per client in
+    # the client_parallel plan — negligible for the paper's MLP, material for
+    # multi-B LMs, so the LM dry-run profile disables it (EXPERIMENTS.md).
+    coherence_scoring: bool = True
+    # --- differential privacy ---
+    dp_enabled: bool = True
+    dp_epsilon: float = 8.0
+    dp_delta: float = 1e-5
+    dp_clip: float = 1.0
+    dp_mode: str = "clipped"            # "paper" (fixed sigma, no clip) | "clipped"
+    dp_sigma: float = 0.01              # used in "paper" mode
+    # --- fault tolerance ---
+    fault_tolerance: bool = True
+    failure_prob: float = 0.05          # per-client per-round Bernoulli draw
+    weibull_scale: float = 600.0        # lambda (seconds)
+    weibull_shape: float = 1.2          # k
+    recovery_time: float = 30.0         # t_r (seconds)
+    checkpoint_every: int = 0           # rounds; 0 -> derive from Weibull model
+    # --- server ---
+    server_opt: str = "sgd"             # sgd | fedavgm | fedadam
+    server_lr: float = 1.0
+    # --- execution plan ---
+    plan: str = "client_parallel"       # client_parallel | client_serial
+    serial_clients_in_step: int = 4     # K folded into one lowered round step
+    local_steps_in_step: int = 1        # local SGD steps per client in the step
+
+
+# ---------------------------------------------------------------------------
+# Mesh / run configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    multi_pod: bool = False
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (2, 16, 16) if self.multi_pod else (16, 16)
+
+    @property
+    def axes(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.multi_pod else ("data", "model")
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    fl: FLConfig = field(default_factory=FLConfig)
+    # remat policy for the layer scan: "full" | "dots" | "none"
+    remat: str = "full"
+    # microbatches for gradient accumulation inside train_step
+    grad_accum: int = 1
+    attention_impl: str = "ref"  # ref | flash (pallas)
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "phi3p5_moe_42b",
+    "llama4_maverick_400b",
+    "recurrentgemma_9b",
+    "mamba2_130m",
+    "seamless_m4t_large_v2",
+    "mistral_large_123b",
+    "qwen2_vl_72b",
+    "qwen2p5_32b",
+    "granite_3_8b",
+    "phi3_mini_3p8b",
+)
+
+# user-facing aliases (--arch accepts either)
+ARCH_ALIASES = {
+    "phi3.5-moe-42b-a6.6b": "phi3p5_moe_42b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-130m": "mamba2_130m",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "qwen2.5-32b": "qwen2p5_32b",
+    "granite-3-8b": "granite_3_8b",
+    "phi3-mini-3.8b": "phi3_mini_3p8b",
+    "paper-mlp": "paper_mlp",
+}
+
+
+def get_arch(arch: str, smoke: bool = False) -> ModelConfig:
+    """Load ``config()`` (or ``smoke_config()``) from repro.configs.<arch>."""
+    arch = ARCH_ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def all_pairs() -> Sequence[Tuple[str, str]]:
+    """Every assigned (architecture x input shape) combination (40)."""
+    return [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]

@@ -1,0 +1,57 @@
+"""Masked weighted aggregation of client updates (paper's global server).
+
+The server computes  w_g ← w_g + server_opt( Σ_i m_i·n_i·Δ̃_i / Σ_i m_i·n_i )
+where m_i is the selection×survival mask and n_i the client's sample count
+(FedAvg weighting).  Two layouts:
+
+* stacked  — Δ as [n_clients, ...] pytree leaves (client_parallel / vmap)
+* streamed — running (weighted_sum, weight) carry (client_serial / scan)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregate_stacked(deltas, mask, weights):
+    """deltas: pytree with leading client axis; mask/weights: [n]."""
+    w = (mask * weights).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1e-9)
+
+    def agg(d):
+        df = d.astype(jnp.float32)
+        wb = w.reshape((-1,) + (1,) * (df.ndim - 1))
+        return jnp.sum(df * wb, axis=0) / denom
+
+    return jax.tree.map(agg, deltas)
+
+
+def stream_init(params_like, dtype=jnp.float32):
+    """Accumulator dtype is fp32 by default; ≥100B configs may pass bf16 to
+    halve the accumulator footprint (DESIGN.md memory budget)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params_like)
+    return zeros, jnp.zeros((), jnp.float32)
+
+
+def stream_accumulate(carry, delta, m_i, n_i):
+    acc, wsum = carry
+    w = (m_i * n_i).astype(jnp.float32)
+    acc = jax.tree.map(
+        lambda a, d: (a.astype(jnp.float32) + w * d.astype(jnp.float32)).astype(a.dtype),
+        acc, delta,
+    )
+    return acc, wsum + w
+
+
+def stream_finalize(carry):
+    acc, wsum = carry
+    denom = jnp.maximum(wsum, 1e-9)
+    return jax.tree.map(lambda a: (a.astype(jnp.float32) / denom), acc)
+
+
+def apply_server_update(server_opt, params, opt_state, agg_delta):
+    """w_g <- w_g + server_opt(Δ)."""
+    agg = jax.tree.map(lambda d, p: d.astype(jnp.float32), agg_delta, params)
+    return server_opt.update(agg, opt_state, params)

@@ -1,0 +1,173 @@
+"""Differential privacy for FL model updates (paper §IV, "Incorporating
+differential privacy in FL").
+
+Two modes:
+
+* ``paper``   — the mechanism exactly as written in the paper:
+                ``∇w ← ∇w + N(0, σ²)`` with a fixed, user-chosen σ
+                ("calibrated to the privacy budget ε" via
+                :func:`gaussian_sigma` with the stated sensitivity).
+                Note: without clipping the sensitivity is unbounded, so this
+                is only (ε, δ)-DP under an *assumed* bound — we reproduce it
+                faithfully and flag it.
+* ``clipped`` — beyond-paper hardening: per-client L2 clipping of the whole
+                update to S, then σ = S·sqrt(2 ln(1.25/δ))/ε (classic
+                Gaussian mechanism), plus an RDP accountant for multi-round
+                composition (client-level DP).
+
+Both operate on arbitrary pytrees so every assigned architecture (dense →
+400B MoE) is covered by the same code path.  The fused clip+noise Pallas
+kernel in ``repro.kernels.dp_clip_noise`` implements the flat hot loop.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+def gaussian_sigma(epsilon: float, delta: float, sensitivity: float = 1.0) -> float:
+    """Classic Gaussian-mechanism noise scale for one release."""
+    if epsilon <= 0:
+        raise ValueError("epsilon must be > 0")
+    return sensitivity * math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
+
+
+# ---------------------------------------------------------------------------
+# Pytree mechanics
+# ---------------------------------------------------------------------------
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree, clip: float):
+    """Scale the whole update so its global L2 norm is <= clip."""
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def add_gaussian_noise(tree, sigma: float, key):
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    noised = [
+        (x + sigma * jax.random.normal(k, x.shape, jnp.float32).astype(jnp.float32)).astype(
+            x.dtype
+        )
+        for x, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, noised)
+
+
+def privatize_update(tree, key, *, mode: str, clip: float, sigma: float,
+                     use_kernel: bool = False):
+    """Apply the paper's DP step to one client's update pytree.
+
+    Returns (noised_update, pre_clip_norm).
+    """
+    if mode == "paper":
+        norm = global_norm(tree)
+        return add_gaussian_noise(tree, sigma, key), norm
+    if mode == "clipped":
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            return kops.dp_clip_noise_tree(tree, key, clip, sigma)
+        clipped, norm = clip_by_global_norm(tree, clip)
+        return add_gaussian_noise(clipped, sigma, key), norm
+    raise ValueError(mode)
+
+
+# ---------------------------------------------------------------------------
+# RDP accountant (Gaussian mechanism, client-level, fixed-size selection)
+# ---------------------------------------------------------------------------
+
+_ORDERS = tuple([1.25, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0,
+                 16.0, 20.0, 32.0, 48.0, 64.0, 128.0, 256.0])
+
+
+def rdp_gaussian(noise_multiplier: float, orders=_ORDERS) -> np.ndarray:
+    """RDP of one Gaussian release: eps(alpha) = alpha / (2 z^2)."""
+    a = np.asarray(orders, dtype=np.float64)
+    return a / (2.0 * noise_multiplier**2)
+
+
+def rdp_subsampled_gaussian(noise_multiplier: float, q: float,
+                            orders=_ORDERS) -> np.ndarray:
+    """Cheap upper bound on RDP with sampling fraction q.
+
+    Uses eps'(alpha) <= min(eps(alpha), 2 q^2 alpha / z^2) — the small-q
+    amplification bound (valid for q·alpha ≲ z); we take the elementwise min
+    with the unamplified value so it is never worse than no amplification.
+    """
+    base = rdp_gaussian(noise_multiplier, orders)
+    a = np.asarray(orders, dtype=np.float64)
+    amplified = 2.0 * (q**2) * a / (noise_multiplier**2)
+    return np.minimum(base, amplified)
+
+
+def rdp_to_dp(rdp: np.ndarray, delta: float, orders=_ORDERS) -> Tuple[float, float]:
+    """Convert composed RDP curve to (epsilon, best_order)."""
+    a = np.asarray(orders, dtype=np.float64)
+    eps = rdp + np.log1p(-1.0 / a) - (np.log(delta) + np.log(a)) / (a - 1.0)
+    i = int(np.argmin(eps))
+    return float(eps[i]), float(a[i])
+
+
+class RdpAccountant:
+    """Tracks cumulative privacy loss over communication rounds."""
+
+    def __init__(self, delta: float, orders=_ORDERS):
+        self.delta = delta
+        self.orders = orders
+        self._rdp = np.zeros(len(orders), dtype=np.float64)
+        self.steps = 0
+
+    def step(self, noise_multiplier: float, q: float = 1.0):
+        if q >= 1.0:
+            self._rdp += rdp_gaussian(noise_multiplier, self.orders)
+        else:
+            self._rdp += rdp_subsampled_gaussian(noise_multiplier, q, self.orders)
+        self.steps += 1
+
+    def epsilon(self) -> float:
+        if self.steps == 0:
+            return 0.0
+        return rdp_to_dp(self._rdp, self.delta, self.orders)[0]
+
+
+def noise_multiplier_for_budget(epsilon: float, delta: float, rounds: int,
+                                q: float = 1.0) -> float:
+    """Smallest z such that `rounds` compositions stay within (eps, delta).
+
+    Bisection over the accountant — the beyond-paper calibration (the paper
+    calibrates a single release only).
+    """
+    lo, hi = 1e-2, 1e4
+
+    def eps_of(z):
+        acc = RdpAccountant(delta)
+        for _ in range(rounds):
+            acc.step(z, q)
+        return acc.epsilon()
+
+    for _ in range(80):
+        mid = math.sqrt(lo * hi)
+        if eps_of(mid) > epsilon:
+            lo = mid
+        else:
+            hi = mid
+    return hi

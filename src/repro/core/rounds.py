@@ -1,0 +1,357 @@
+"""The FL round engine — Algorithm 1 as a lowered JAX step.
+
+Two execution plans (DESIGN.md §4):
+
+* ``client_parallel``: clients live on the leading axis of every batch leaf
+  (sharded over the ``data``(×``pod``) mesh axes).  Local training runs as a
+  ``vmap`` over clients; aggregation is a masked weighted mean over the
+  client axis (GSPMD turns it into the all-reduce).
+* ``client_serial``: one client at a time with the WHOLE mesh (FSDP over
+  ``data``); ``lax.scan`` over the K selected clients.  This is the only
+  plan that fits ≥100B-parameter models.
+
+Fault-tolerance semantics inside a lowered step (see DESIGN.md): each failing
+client loses the work after its last checkpoint — with checkpointing every
+``c`` local steps a failure at step f keeps ``c·⌊f/c⌋`` steps; without
+checkpointing the failed client contributes nothing.  Time overheads are
+accounted by the cost model in ``core/fault.py`` at the driver level.
+
+Differential privacy: each selected client's update Δ_i is clipped and
+noised (``core/dp.py``) *before* aggregation — noise on updates, never on
+utility scores, exactly as the paper specifies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core import aggregation as agg
+from repro.core import dp as dp_lib
+from repro.core import selection as sel_lib
+from repro.optim.optimizers import make_server_optimizer, sgd
+
+
+class RoundState(NamedTuple):
+    """Carried across communication rounds."""
+
+    params: Any
+    server_opt_state: Any
+    util: sel_lib.UtilityState
+    kctl: sel_lib.KControllerState
+    round_idx: jnp.ndarray
+    rng: jnp.ndarray
+
+
+class RoundMetrics(NamedTuple):
+    sel_mask: jnp.ndarray
+    avail: jnp.ndarray
+    failed: jnp.ndarray
+    pre_loss: jnp.ndarray
+    post_loss: jnp.ndarray
+    global_loss: jnp.ndarray
+    k_effective: jnp.ndarray
+    update_norms: jnp.ndarray
+
+
+def init_round_state(params, fl: FLConfig, key, n_clients=None, **util_kw) -> RoundState:
+    n = n_clients or fl.n_clients
+    server = make_server_optimizer(fl.server_opt, fl.server_lr)
+    return RoundState(
+        params=params,
+        server_opt_state=server.init(params),
+        util=sel_lib.init_utility_state(n, key=key, **util_kw),
+        kctl=sel_lib.init_k_state(fl),
+        round_idx=jnp.zeros((), jnp.int32),
+        rng=key,
+    )
+
+
+def microbatched_value_and_grad(loss_fn, grad_accum: int):
+    """Gradient accumulation: batch leaves [B, ...] are split into
+    ``grad_accum`` microbatches scanned sequentially — the activation
+    working set shrinks by grad_accum× (essential for the ≥100B configs)."""
+    if grad_accum <= 1:
+        return jax.value_and_grad(loss_fn)
+
+    def vag(params, batch):
+        mb = jax.tree.map(
+            lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:]),
+            batch,
+        )
+
+        def step(carry, b):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, b)
+            g_acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, g), _ = jax.lax.scan(step, (jnp.zeros((), jnp.float32), zero_g), mb)
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree.map(
+            lambda gg, p: (gg * scale).astype(p.dtype), g, params
+        )
+
+    return vag
+
+
+def _local_train_fn(loss_fn, fl: FLConfig, grad_accum: int = 1):
+    """One client's local training: scan over local steps with step masking
+    (effective_steps implements checkpoint-recovery truncation)."""
+    vag = microbatched_value_and_grad(loss_fn, grad_accum)
+
+    def local_train(global_params, step_batches, effective_steps):
+        opt = sgd(fl.local_lr)
+
+        def step(carry, xs):
+            p, s = carry
+            batch = xs
+            loss, grads = vag(p, batch)
+            new_p, _ = opt.update(grads, (), p)
+            live = s < effective_steps
+            # jnp.where keeps params in their storage dtype — no fp32
+            # temporaries over the whole tree (2x param-size saving at 123B;
+            # EXPERIMENTS.md §Perf A5)
+            p = jax.tree.map(lambda a, b: jnp.where(live, b, a), p, new_p)
+            return (p, s + 1), loss
+
+        (p_final, _), losses = jax.lax.scan(
+            step, (global_params, jnp.zeros((), jnp.float32)), step_batches
+        )
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            p_final, global_params,
+        )
+        return delta, losses[0], losses[-1]
+
+    return local_train
+
+
+def _effective_steps(fail_step, local_steps: int, ckpt_every: int, ft_enabled: bool):
+    """Steps of work that survive a failure at ``fail_step``."""
+    failed = fail_step < local_steps
+    if not ft_enabled:
+        return jnp.where(failed, 0, local_steps), failed
+    c = max(int(ckpt_every), 1)
+    kept = (fail_step // c) * c
+    return jnp.where(failed, kept, local_steps), failed
+
+
+# ---------------------------------------------------------------------------
+# client_parallel plan
+# ---------------------------------------------------------------------------
+
+
+def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
+                        ckpt_every_steps: int = 2, dp_use_kernel: bool = False,
+                        grad_accum: int = 1, delta_constraint=None):
+    """Build ``round_step(state, batches) -> (state, metrics)``.
+
+    batches: pytree whose leaves have leading [n_clients, local_steps, ...].
+    ``delta_constraint``: optional fn applied to the stacked client deltas —
+    steps.py uses it to pin the client axis onto the data mesh axes so GSPMD
+    never materialises every client's weights on one shard.
+    """
+    server = make_server_optimizer(fl.server_opt, fl.server_lr)
+    strategy = sel_lib.get_strategy(fl.selection)
+    local_train = _local_train_fn(loss_fn, fl, grad_accum)
+    k_max = int(fl.k_max or n_clients)
+    sigma = (
+        fl.dp_sigma
+        if fl.dp_mode == "paper"
+        else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip)
+    )
+
+    def round_step(state: RoundState, batches) -> Tuple[RoundState, RoundMetrics]:
+        rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
+
+        # ---- GetAvailableClients (Alg.1 line 3) ----
+        avail = jax.random.bernoulli(k_avail, 0.95, (n_clients,)).astype(jnp.float32)
+
+        # ---- ComputeUtility + SelectTopK (line 4) ----
+        utility = sel_lib.compute_utility(state.util, fl)
+        k_eff = (state.kctl.k if fl.adaptive_k
+                 else jnp.asarray(float(fl.clients_per_round), jnp.float32))
+        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, k_max)
+
+        # ---- failure injection + checkpoint-recovery truncation ----
+        # failure happens with prob p_f, uniformly within local steps
+        local_steps = jax.tree.leaves(batches)[0].shape[1]
+        fails = jax.random.bernoulli(jax.random.fold_in(k_fail, 1),
+                                     fl.failure_prob, (n_clients,))
+        fail_at = jnp.where(
+            fails, jax.random.randint(jax.random.fold_in(k_fail, 2),
+                                      (n_clients,), 0, local_steps), local_steps
+        )
+        eff_steps, failed = _effective_steps(
+            fail_at, local_steps, ckpt_every_steps, fl.fault_tolerance
+        )
+
+        # ---- local training, in parallel over clients (line 5) ----
+        deltas, pre_loss, post_loss = jax.vmap(
+            local_train, in_axes=(None, 0, 0)
+        )(state.params, batches, eff_steps)
+        if delta_constraint is not None:
+            deltas = delta_constraint(deltas)
+
+        # ---- DP: noise on updates, not on scores (lines 8-9) ----
+        if fl.dp_enabled:
+            keys = jax.random.split(k_dp, n_clients)
+
+            def privatize(d, k):
+                return dp_lib.privatize_update(
+                    d, k, mode=fl.dp_mode, clip=fl.dp_clip, sigma=sigma,
+                    use_kernel=dp_use_kernel,
+                )
+
+            deltas, norms = jax.vmap(privatize)(deltas, keys)
+        else:
+            norms = jax.vmap(dp_lib.global_norm)(deltas)
+
+        # drop clients whose surviving work is zero
+        contrib_mask = sel_mask * (eff_steps > 0)
+
+        # ---- aggregation + server update (line 18) ----
+        agg_delta = agg.aggregate_stacked(deltas, contrib_mask, state.util.data_size)
+        new_params, new_server_state = agg.apply_server_update(
+            server, state.params, state.server_opt_state, agg_delta
+        )
+
+        # ---- update-coherence (data-quality observable): cos(Δ_i, Δ_agg) ----
+        def _dot(a, b):
+            return sum(jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+                       for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+        agg_norm = jnp.sqrt(jnp.maximum(_dot(agg_delta, agg_delta), 1e-18))
+
+        def _coh(delta_i):
+            num = sum(
+                jnp.sum(d.astype(jnp.float32) * g.astype(jnp.float32))
+                for d, g in zip(jax.tree.leaves(delta_i), jax.tree.leaves(agg_delta))
+            )
+            nrm = jnp.sqrt(jnp.maximum(_dot(delta_i, delta_i), 1e-18))
+            return num / (nrm * agg_norm)
+
+        if fl.coherence_scoring:
+            coherence = jax.vmap(_coh)(deltas) * contrib_mask
+        else:
+            coherence = None
+
+        # ---- bookkeeping ----
+        sel_denom = jnp.maximum(jnp.sum(contrib_mask), 1.0)
+        global_loss = jnp.sum(post_loss * contrib_mask) / sel_denom
+        util = sel_lib.update_utility_state(state.util, contrib_mask, pre_loss,
+                                            post_loss, fl, coherence=coherence)
+        kctl = sel_lib.update_k(state.kctl, global_loss, fl)
+
+        new_state = RoundState(new_params, new_server_state, util, kctl,
+                               state.round_idx + 1, rng)
+        metrics = RoundMetrics(sel_mask, avail, failed.astype(jnp.float32),
+                               pre_loss, post_loss, global_loss, k_eff, norms)
+        return new_state, metrics
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
+# client_serial plan (for >=8B models; whole mesh per client)
+# ---------------------------------------------------------------------------
+
+
+def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
+                      dp_use_kernel: bool = False, grad_accum: int = 1,
+                      delta_dtype=None):
+    """Build ``round_step(state, batches) -> (state, metrics)``.
+
+    batches leaves: [K, local_steps, ...] — data for the K client slots that
+    the host-side driver filled with the selected clients' shards (the
+    in-step selection produces the slot→client mapping used for weighting).
+    K = fl.serial_clients_in_step is static.
+    """
+    server = make_server_optimizer(fl.server_opt, fl.server_lr)
+    strategy = sel_lib.get_strategy(fl.selection)
+    local_train = _local_train_fn(loss_fn, fl, grad_accum)
+    K = fl.serial_clients_in_step
+    k_max = int(fl.k_max or n_clients)
+    sigma = (
+        fl.dp_sigma
+        if fl.dp_mode == "paper"
+        else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip)
+    )
+
+    def round_step(state: RoundState, batches) -> Tuple[RoundState, RoundMetrics]:
+        rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
+        avail = jax.random.bernoulli(k_avail, 0.95, (n_clients,)).astype(jnp.float32)
+        utility = sel_lib.compute_utility(state.util, fl)
+        k_eff = jnp.minimum(
+            state.kctl.k if fl.adaptive_k else float(fl.clients_per_round), float(K)
+        )
+        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, min(K, k_max))
+        # slot i <- i-th selected client (host driver feeds matching data)
+        _, sel_idx = jax.lax.top_k(sel_mask + utility * 1e-6, K)
+        slot_live = (jnp.arange(K) < k_eff).astype(jnp.float32)
+
+        local_steps = jax.tree.leaves(batches)[0].shape[1]
+        fails = jax.random.bernoulli(k_fail, fl.failure_prob, (K,))
+        fail_at = jnp.where(
+            fails,
+            jax.random.randint(jax.random.fold_in(k_fail, 1), (K,), 0, local_steps),
+            local_steps,
+        )
+        eff_steps, failed = _effective_steps(fail_at, local_steps, 2, fl.fault_tolerance)
+
+        def per_client(carry, xs):
+            acc, pre_l, post_l, norms, slot = carry
+            client_batches, e_steps, live = xs
+            delta, pre, post = local_train(state.params, client_batches, e_steps)
+            if fl.dp_enabled:
+                delta, norm = dp_lib.privatize_update(
+                    delta, jax.random.fold_in(k_dp, slot),
+                    mode=fl.dp_mode, clip=fl.dp_clip, sigma=sigma,
+                    use_kernel=dp_use_kernel,
+                )
+            else:
+                norm = dp_lib.global_norm(delta)
+            m = live * (e_steps > 0)
+            acc = agg.stream_accumulate(acc, delta, m, 1.0)
+            return (
+                acc,
+                pre_l.at[slot].set(pre),
+                post_l.at[slot].set(post),
+                norms.at[slot].set(norm),
+                slot + 1,
+            ), None
+
+        acc0 = agg.stream_init(state.params, delta_dtype or jnp.float32)
+        zK = jnp.zeros((K,), jnp.float32)
+        (acc, pre_loss, post_loss, norms, _), _ = jax.lax.scan(
+            per_client,
+            (acc0, zK, zK, zK, jnp.zeros((), jnp.int32)),
+            (batches, eff_steps, slot_live),
+        )
+        agg_delta = agg.stream_finalize(acc)
+        new_params, new_server_state = agg.apply_server_update(
+            server, state.params, state.server_opt_state, agg_delta
+        )
+
+        contrib = slot_live * (eff_steps > 0)
+        denom = jnp.maximum(jnp.sum(contrib), 1.0)
+        global_loss = jnp.sum(post_loss * contrib) / denom
+        # scatter slot losses back to the selected clients' utility entries
+        full_mask = jnp.zeros((n_clients,), jnp.float32).at[sel_idx].add(contrib)
+        full_pre = jnp.zeros((n_clients,), jnp.float32).at[sel_idx].add(pre_loss * contrib)
+        full_post = jnp.zeros((n_clients,), jnp.float32).at[sel_idx].add(post_loss * contrib)
+        util = sel_lib.update_utility_state(state.util, full_mask, full_pre, full_post, fl)
+        kctl = sel_lib.update_k(state.kctl, global_loss, fl)
+
+        new_state = RoundState(new_params, new_server_state, util, kctl,
+                               state.round_idx + 1, rng)
+        metrics = RoundMetrics(full_mask, avail, failed.astype(jnp.float32),
+                               full_pre, full_post, global_loss, k_eff, norms)
+        return new_state, metrics
+
+    return round_step

@@ -1,0 +1,231 @@
+"""Client selection (paper §IV-A, Algorithm 1).
+
+Utility scores combine (i) performance contribution (EMA of local loss
+improvement), (ii) data quality (size × label-entropy proxy), (iii) compute
+capacity, (iv) a staleness/diversity bonus so rarely-selected clients are
+revisited.  Scores drive SelectTopK; the *adaptive* controller grows K when
+the global model plateaus and shrinks it while improvement is strong —
+trading accuracy against cost as in F(S_t) = α·Accuracy − γ·Cost.
+
+All strategy functions are jit-safe: they return a float mask over clients
+and use a *static* k_max with a dynamic effective K (entries ranked below
+K_t are zeroed), so a lowered round step supports adaptive K without
+recompilation.
+
+Registry: ``get_strategy(name)`` →
+  adaptive_utility (ours) | random | acfl | power_of_choice | adafl
+  (FedL2P is a personalization baseline — see experiments/fedl2p.py — it
+  reuses ``random`` selection per its paper.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+
+
+class UtilityState(NamedTuple):
+    """Per-client running statistics (all [n_clients] f32)."""
+
+    perf_ema: jnp.ndarray          # EMA of local loss improvement
+    loss_ema: jnp.ndarray          # EMA of local loss (ACFL uncertainty proxy)
+    loss_var: jnp.ndarray          # EMA of squared loss deviation
+    data_size: jnp.ndarray         # samples per client (normalised)
+    data_quality: jnp.ndarray      # label-entropy proxy in [0, 1]
+    coherence: jnp.ndarray         # EMA of cos(delta_i, aggregated delta) —
+                                   # the observable data-quality signal: a
+                                   # client with corrupted labels pushes
+                                   # against the consensus update
+    compute: jnp.ndarray           # relative compute capacity
+    comm_cost: jnp.ndarray         # relative communication cost
+    last_selected: jnp.ndarray     # rounds since last participation
+    participation: jnp.ndarray     # cumulative selection count
+
+
+def init_utility_state(n: int, key=None, data_size=None, data_quality=None,
+                       compute=None, comm_cost=None) -> UtilityState:
+    ones = jnp.ones((n,), jnp.float32)
+    if key is not None:
+        k1, k2 = jax.random.split(key)
+        compute = compute if compute is not None else jax.random.uniform(
+            k1, (n,), minval=0.3, maxval=1.0)
+        comm_cost = comm_cost if comm_cost is not None else jax.random.uniform(
+            k2, (n,), minval=0.2, maxval=1.0)
+    return UtilityState(
+        perf_ema=jnp.zeros((n,), jnp.float32),
+        loss_ema=ones * 2.0,
+        loss_var=ones,
+        data_size=(data_size if data_size is not None else ones),
+        data_quality=(data_quality if data_quality is not None else ones),
+        coherence=jnp.zeros((n,), jnp.float32),
+        compute=(compute if compute is not None else ones),
+        comm_cost=(comm_cost if comm_cost is not None else ones * 0.5),
+        last_selected=jnp.zeros((n,), jnp.float32),
+        participation=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def compute_utility(state: UtilityState, fl: FLConfig) -> jnp.ndarray:
+    """U_i — the paper's multi-factor utility score.
+
+    F(S_t) = α·Accuracy(S_t) − γ·Cost(S_t): the per-client marginal of the
+    accuracy term is the perf/data factors; the cost term subtracts
+    communication+computation cost (Cost_i = Comm_i + Comp_i).
+    """
+    ds = state.data_size / jnp.maximum(jnp.mean(state.data_size), 1e-9)
+    # NOTE (validated in EXPERIMENTS.md §Paper-claims): raw local-loss
+    # improvement ANTI-selects under label corruption — noisy clients
+    # "improve" more because they fit their own noise from a worse start.
+    # Update coherence is the reliable quality observable, so it carries the
+    # dominant weight; perf is kept small as a convergence-speed signal.
+    perf = 0.3 * state.perf_ema
+    quality = 0.25 * state.data_quality * jnp.log1p(ds) + 5.0 * state.coherence
+    capacity = state.compute
+    staleness = jnp.log1p(state.last_selected) * 0.1  # exploration bonus
+    cost = state.comm_cost + (1.0 / jnp.maximum(capacity, 0.1)) * 0.5
+    return fl.alpha * (perf + quality + 0.2 * capacity) - fl.gamma * cost + staleness
+
+
+# ---------------------------------------------------------------------------
+# Strategies — (key, state, utility, avail_mask, k_eff, k_max) -> mask [n]
+# ---------------------------------------------------------------------------
+
+
+def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k_eff, k_max: int):
+    """Float mask selecting the dynamic top-k_eff of the static top-k_max."""
+    neg = jnp.finfo(jnp.float32).min
+    masked = jnp.where(avail > 0, scores, neg)
+    _, idx = jax.lax.top_k(masked, k_max)
+    ranks = jnp.arange(k_max)
+    take = (ranks < k_eff).astype(jnp.float32)
+    mask = jnp.zeros_like(scores).at[idx].add(take)
+    # never select unavailable clients even if k_eff > #available
+    return mask * (avail > 0)
+
+
+def sel_adaptive_utility(key, state, utility, avail, k_eff, k_max):
+    """Ours: top-K by utility with ε-greedy exploration noise."""
+    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    return _topk_mask(utility + noise, avail, k_eff, k_max)
+
+
+def sel_random(key, state, utility, avail, k_eff, k_max):
+    scores = jax.random.uniform(key, utility.shape)
+    return _topk_mask(scores, avail, k_eff, k_max)
+
+
+def sel_acfl(key, state, utility, avail, k_eff, k_max):
+    """ACFL-style active selection: uncertainty sampling — prefer clients
+    with high loss level & variance (most informative)."""
+    uncertainty = state.loss_ema + jnp.sqrt(jnp.maximum(state.loss_var, 0.0))
+    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    return _topk_mask(uncertainty + noise, avail, k_eff, k_max)
+
+
+def sel_power_of_choice(key, state, utility, avail, k_eff, k_max):
+    """Power-of-choice: sample d=2·k_max candidates, keep highest-loss K."""
+    d = min(2 * k_max, avail.shape[0])
+    cand = _topk_mask(jax.random.uniform(key, utility.shape), avail, d, d)
+    scores = jnp.where(cand > 0, state.loss_ema, jnp.finfo(jnp.float32).min)
+    return _topk_mask(scores, avail, k_eff, k_max)
+
+
+def sel_adafl(key, state, utility, avail, k_eff, k_max):
+    """AdaFL: current + historical contribution, no cost/staleness terms."""
+    hist = state.perf_ema + 0.1 * state.participation / jnp.maximum(
+        jnp.max(state.participation), 1.0
+    )
+    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    return _topk_mask(hist + noise, avail, k_eff, k_max)
+
+
+_STRATEGIES = {
+    "adaptive_utility": sel_adaptive_utility,
+    "random": sel_random,
+    "acfl": sel_acfl,
+    "power_of_choice": sel_power_of_choice,
+    "adafl": sel_adafl,
+}
+
+
+def get_strategy(name: str) -> Callable:
+    return _STRATEGIES[name]
+
+
+def strategy_names():
+    return tuple(_STRATEGIES)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive-K controller
+# ---------------------------------------------------------------------------
+
+
+class KControllerState(NamedTuple):
+    k: jnp.ndarray            # current K (f32 for jit friendliness)
+    best_metric: jnp.ndarray  # best global metric seen
+    plateau: jnp.ndarray      # consecutive rounds without improvement
+
+
+def init_k_state(fl: FLConfig) -> KControllerState:
+    return KControllerState(
+        k=jnp.asarray(float(fl.clients_per_round), jnp.float32),
+        best_metric=jnp.asarray(jnp.inf, jnp.float32),
+        plateau=jnp.zeros((), jnp.float32),
+    )
+
+
+def update_k(state: KControllerState, global_loss, fl: FLConfig,
+             tol: float = 1e-3, patience: float = 3.0) -> KControllerState:
+    """Grow K on plateau (need more signal), shrink while improving fast
+    (save Cost(S_t)); clamp to [k_min, k_max]."""
+    k_max = float(fl.k_max or fl.n_clients)
+    improved = global_loss < state.best_metric * (1.0 - tol)
+    plateau = jnp.where(improved, 0.0, state.plateau + 1.0)
+    grow = plateau >= patience
+    k = jnp.where(grow, state.k + jnp.maximum(1.0, 0.25 * state.k), state.k)
+    strong = global_loss < state.best_metric * (1.0 - 10.0 * tol)
+    k = jnp.where(strong & ~grow, k - 1.0, k)
+    k = jnp.clip(k, float(fl.k_min), k_max)
+    return KControllerState(
+        k=k,
+        best_metric=jnp.minimum(state.best_metric, global_loss),
+        plateau=jnp.where(grow, 0.0, plateau),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Utility-state update after a round
+# ---------------------------------------------------------------------------
+
+
+def update_utility_state(state: UtilityState, sel_mask, pre_loss, post_loss,
+                         fl: FLConfig, coherence=None) -> UtilityState:
+    """EMA updates from this round's local training results.
+
+    pre/post_loss: [n] local loss before/after local training; only selected
+    clients' stats move.  ``coherence``: [n] cos(delta_i, agg_delta) for the
+    selected clients (0 elsewhere) — the update-quality signal.
+    """
+    m = sel_mask > 0
+    improvement = jnp.maximum(pre_loss - post_loss, -1.0)
+    e = fl.utility_ema
+    perf = jnp.where(m, (1 - e) * state.perf_ema + e * improvement, state.perf_ema)
+    loss_ema = jnp.where(m, (1 - e) * state.loss_ema + e * post_loss, state.loss_ema)
+    dev = (post_loss - loss_ema) ** 2
+    loss_var = jnp.where(m, (1 - e) * state.loss_var + e * dev, state.loss_var)
+    coh = state.coherence
+    if coherence is not None:
+        coh = jnp.where(m, (1 - e) * coh + e * coherence, coh)
+    return state._replace(
+        perf_ema=perf,
+        loss_ema=loss_ema,
+        loss_var=loss_var,
+        coherence=coh,
+        last_selected=jnp.where(m, 0.0, state.last_selected + 1.0),
+        participation=state.participation + sel_mask,
+    )

@@ -1,0 +1,226 @@
+"""Synthetic stand-ins for the paper's datasets (offline container).
+
+* ``unsw_nb15_like`` — mirrors the UNSW-NB15 schema: 42 numeric flow
+  features (durations, byte/packet counts, rates, TTLs, window sizes, ...)
+  drawn from per-class lognormal/gamma/normal mixtures; 10 classes (normal +
+  9 attack categories: fuzzers, analysis, backdoor, dos, exploits, generic,
+  recon, shellcode, worms) with the published heavy class imbalance
+  (~87.5% normal traffic).
+* ``road_like`` — CAN-bus windows mimicking the ROAD *correlated masquerade*
+  attack: per-ID correlated signal streams; an attack replays one signal's
+  dynamics on another ID with a small offset — statistically stealthy, which
+  is exactly the ROAD difficulty.
+
+Non-IID federation: Dirichlet(α) label skew + per-client feature shift, as
+assumed by the paper ("non-IID data distribution across clients").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+UNSW_N_FEATURES = 42
+UNSW_N_CLASSES = 10
+UNSW_CLASS_PRIORS = np.array(
+    [0.875, 0.024, 0.003, 0.002, 0.016, 0.044, 0.021, 0.010, 0.004, 0.001]
+)
+UNSW_CLASS_PRIORS = UNSW_CLASS_PRIORS / UNSW_CLASS_PRIORS.sum()
+
+
+def unsw_nb15_like(rng: np.random.Generator, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (X [n,42] float32 standardised, y_cat [n], y_bin [n])."""
+    y = rng.choice(UNSW_N_CLASSES, size=n, p=UNSW_CLASS_PRIORS)
+    X = np.empty((n, UNSW_N_FEATURES), np.float64)
+
+    # class-conditional generative structure: each class shifts a subset of
+    # features (e.g. DoS inflates packet rates; recon touches many ports)
+    base_mu = rng.normal(0.0, 1.0, (UNSW_N_CLASSES, UNSW_N_FEATURES)) * 0.0
+    cls_shift = rng.normal(0.0, 1.2, (UNSW_N_CLASSES, UNSW_N_FEATURES))
+    cls_mask = rng.random((UNSW_N_CLASSES, UNSW_N_FEATURES)) < 0.25
+    cls_shift = cls_shift * cls_mask
+    cls_shift[0] = 0.0  # normal traffic is the reference
+
+    # heavy-tailed "volume" features (bytes, packets, duration): lognormal
+    heavy = np.zeros(UNSW_N_FEATURES, bool)
+    heavy[:12] = True
+    # rate-like features: gamma
+    ratef = np.zeros(UNSW_N_FEATURES, bool)
+    ratef[12:22] = True
+
+    mu = base_mu[y] + cls_shift[y]
+    z = rng.normal(0.0, 1.0, (n, UNSW_N_FEATURES))
+    X = mu + z
+    X[:, heavy] = np.exp(0.8 * X[:, heavy])  # lognormal tails
+    X[:, ratef] = np.square(X[:, ratef])  # chi2-ish rates
+
+    # correlated flow structure (shared latent per sample)
+    latent = rng.normal(0.0, 1.0, (n, 4))
+    mix = rng.normal(0.0, 0.4, (4, UNSW_N_FEATURES))
+    X = X + latent @ mix
+
+    # standardise
+    X = (X - X.mean(0)) / (X.std(0) + 1e-9)
+    return X.astype(np.float32), y.astype(np.int32), (y > 0).astype(np.int32)
+
+
+def road_like(
+    rng: np.random.Generator,
+    n: int,
+    window: int = 64,
+    n_signals: int = 6,
+    attack_rate: float = 0.25,
+    offset: float = 0.35,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Correlated-masquerade CAN windows.
+
+    Normal windows: n_signals AR(1) streams with a shared low-frequency
+    driver (vehicle state).  Attack: one signal is replaced by a *replay* of
+    another signal's dynamics plus a small constant offset — the masquerade.
+    Features: per-signal (mean, std, mean |Δ|, lag-1 autocorr, corr to
+    signal 0) -> 5·n_signals features.
+    Returns (X, y, y) — binary labels only (matches our ROAD use).
+    """
+    y = (rng.random(n) < attack_rate).astype(np.int32)
+    feats = np.empty((n, 5 * n_signals), np.float64)
+    t = np.arange(window)
+    for i in range(n):
+        driver = np.sin(2 * np.pi * t / window * rng.uniform(0.5, 2.0) + rng.uniform(0, 6.28))
+        sig = np.empty((n_signals, window))
+        phase = rng.uniform(0, 6.28, n_signals)
+        gain = rng.uniform(0.5, 1.5, n_signals)
+        ar = rng.uniform(0.7, 0.95, n_signals)
+        for s in range(n_signals):
+            noise = rng.normal(0, 0.15, window)
+            x = np.zeros(window)
+            for k in range(1, window):
+                x[k] = ar[s] * x[k - 1] + noise[k]
+            sig[s] = gain[s] * np.roll(driver, int(phase[s] * 3)) + x
+        if y[i]:
+            # masquerade: victim signal replaced by replayed source + offset
+            victim, src = rng.choice(n_signals, 2, replace=False)
+            shift = rng.integers(1, window // 4)
+            sig[victim] = np.roll(sig[src], shift) + offset
+        f = []
+        for s in range(n_signals):
+            x = sig[s]
+            dx = np.abs(np.diff(x))
+            ac = np.corrcoef(x[:-1], x[1:])[0, 1] if x.std() > 1e-9 else 0.0
+            c0 = np.corrcoef(x, sig[0])[0, 1] if s > 0 and x.std() > 1e-9 else 1.0
+            f.extend([x.mean(), x.std(), dx.mean(), ac, c0])
+        feats[i] = f
+    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-9)
+    return feats.astype(np.float32), y, y
+
+
+@dataclass
+class FederatedData:
+    """Per-client tabular data + metadata used by utility scores."""
+
+    x: List[np.ndarray]
+    y: List[np.ndarray]
+    test_x: np.ndarray
+    test_y: np.ndarray
+    n_features: int
+    n_classes: int
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.x)
+
+    def data_sizes(self) -> np.ndarray:
+        return np.array([len(xi) for xi in self.x], np.float32)
+
+    def label_entropy(self) -> np.ndarray:
+        """Per-client normalised label entropy — the data-quality proxy."""
+        out = []
+        for yi in self.y:
+            p = np.bincount(yi, minlength=self.n_classes).astype(np.float64)
+            p = p / max(p.sum(), 1)
+            h = -(p[p > 0] * np.log(p[p > 0])).sum()
+            out.append(h / np.log(self.n_classes))
+        return np.asarray(out, np.float32)
+
+
+def dirichlet_partition(rng: np.random.Generator, labels: np.ndarray, n_clients: int,
+                        alpha: float, min_per_client: int = 8) -> List[np.ndarray]:
+    """Label-skewed non-IID split (standard Dirichlet protocol)."""
+    n_classes = int(labels.max()) + 1
+    idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
+    for idx in idx_by_class:
+        rng.shuffle(idx)
+    client_idx: List[List[int]] = [[] for _ in range(n_clients)]
+    for c, idx in enumerate(idx_by_class):
+        if len(idx) == 0:
+            continue
+        props = rng.dirichlet([alpha] * n_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for ci, part in enumerate(np.split(idx, cuts)):
+            client_idx[ci].extend(part.tolist())
+    # guarantee a minimum shard per client
+    pool = [i for cl in client_idx for i in cl]
+    for ci in range(n_clients):
+        while len(client_idx[ci]) < min_per_client:
+            client_idx[ci].append(int(rng.choice(pool)))
+    return [np.asarray(sorted(c), np.int64) for c in client_idx]
+
+
+def make_federated(
+    seed: int,
+    dataset: str = "unsw",
+    n_samples: int = 20_000,
+    n_clients: int = 40,
+    alpha: float = 0.5,
+    test_frac: float = 0.25,
+    feature_shift: float = 0.15,
+    label_noise_frac: float = 0.0,
+    label_noise_rate: float = 0.4,
+) -> FederatedData:
+    """``label_noise_frac`` of the clients get ``label_noise_rate`` of their
+    labels flipped — the low-data-quality clients whose exclusion is exactly
+    what the paper's utility-based selection is for (random selection keeps
+    sampling them; loss-seeking ACFL actively PREFERS them)."""
+    rng = np.random.default_rng(seed)
+    if dataset == "unsw":
+        X, y_cat, y_bin = unsw_nb15_like(rng, n_samples)
+        y = y_bin  # anomaly detection = binary task (paper metric: AUC-ROC)
+    elif dataset == "road":
+        X, y, _ = road_like(rng, n_samples)
+    else:
+        raise ValueError(dataset)
+    n_test = int(len(X) * test_frac)
+    perm = rng.permutation(len(X))
+    test_i, train_i = perm[:n_test], perm[n_test:]
+    parts = dirichlet_partition(rng, y[train_i], n_clients, alpha)
+    noisy_clients = set(
+        rng.choice(n_clients, int(round(label_noise_frac * n_clients)),
+                   replace=False).tolist()
+    )
+    xs, ys = [], []
+    for ci, pi in enumerate(parts):
+        gi = train_i[pi]
+        shift = rng.normal(0, feature_shift, X.shape[1]).astype(np.float32)
+        xs.append(X[gi] + shift)  # per-client covariate shift
+        yi = y[gi].copy()
+        if ci in noisy_clients:
+            flip = rng.random(len(yi)) < label_noise_rate
+            yi[flip] = 1 - yi[flip]  # binary labels
+        ys.append(yi)
+    return FederatedData(
+        x=xs, y=ys, test_x=X[test_i], test_y=y[test_i],
+        n_features=X.shape[1], n_classes=2,
+    )
+
+
+def round_batches(rng: np.random.Generator, fed: FederatedData, local_steps: int,
+                  batch: int) -> Dict[str, np.ndarray]:
+    """Sample per-round batches: leaves [n_clients, local_steps, batch, ...]."""
+    n = fed.n_clients
+    xs = np.empty((n, local_steps, batch, fed.n_features), np.float32)
+    ys = np.empty((n, local_steps, batch), np.int32)
+    for ci in range(n):
+        idx = rng.integers(0, len(fed.x[ci]), (local_steps, batch))
+        xs[ci] = fed.x[ci][idx]
+        ys[ci] = fed.y[ci][idx]
+    return {"x": xs, "y": ys}

@@ -1,0 +1,111 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Online-softmax tiling: grid (batch, q_heads, Q/bq, T/bk); the innermost grid
+axis walks K/V blocks sequentially (TPU grids are sequential), carrying the
+running max ``m``, normaliser ``l`` and un-normalised accumulator in VMEM
+scratch.  Q/K/V blocks are staged HBM→VMEM by BlockSpec; the MXU consumes
+[bq, d] × [bk, d]^T tiles (d = head_dim ≤ 128, bq = bk = 128 by default —
+multiples of the 128-lane MXU).
+
+Supports causal masking, sliding windows and GQA (q head h reads kv head
+h // group) directly in the index maps, matching ``ref.flash_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: Optional[int],
+            bq: int, bk: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # [bq, d]
+    k = k_ref[0, 0].astype(jnp.float32)  # [bk, d]
+    v = v_ref[0, 0].astype(jnp.float32)  # [bk, d]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+    # absolute positions (q offset accounts for prefill-with-prefix: t-s)
+    rq = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + (seq_k - seq_q)
+    rk = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= rk <= rq
+    if window is not None:
+        mask &= rk > rq - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """q: [B,S,HQ,D]; k,v: [B,T,HKV,D] -> [B,S,HQ,D]."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+
+    # layout: [B, H, S, D] blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, hq, s // bq, t // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=1.0 / math.sqrt(d), causal=causal, window=window,
+            bq=bq, bk=bk, seq_q=s, seq_k=t,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bi, hi, qi, ki, g=g: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,122 @@
+"""Flash decode (one query token vs a long KV cache) as a Pallas TPU kernel.
+
+Tiled over KV blocks with online softmax; optionally returns the partial
+(o, m, l) triple instead of the normalised output so a *context-parallel*
+caller (KV sequence sharded over the ``model`` mesh axis, DESIGN.md §5) can
+combine shards with a distributed log-sum-exp:
+
+    m* = max_i m_i ;  l* = Σ_i l_i·e^{m_i−m*} ;  o = Σ_i o_i·l_i·e^{m_i−m*} / l*
+
+All q heads of one batch element are processed per grid step ([HQ, D] tile —
+HQ ≤ 128 for every assigned config, so one MXU tile), with the GQA mapping
+done by repeating K/V rows across the q-head group inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, bk: int, group: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # [HQ, D]
+    k = k_ref[0].astype(jnp.float32)          # [bk, HKV, D]
+    v = v_ref[0].astype(jnp.float32)
+    hq = q.shape[0]
+    hkv = k.shape[1]
+
+    # scores per q head: head h attends kv head h // group
+    kg = jnp.repeat(k, group, axis=1)          # [bk, HQ, D]
+    vg = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("hd,thd->ht", q, kg) * scale  # [HQ, bk]
+
+    valid = (ki * bk + jax.lax.broadcasted_iota(jnp.int32, (hq, bk), 1)) < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                    # [HQ, bk]
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("ht,thd->hd", p, vg)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...]
+        l_ref[0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "return_partials"))
+def flash_decode(q, k, v, length, *, bk: int = 256, interpret: bool = True,
+                 return_partials: bool = False):
+    """q: [B,HQ,D]; k,v: [B,T,HKV,D]; length: [B] valid cache prefix.
+
+    Returns [B,HQ,D] (or (o, m, l) partials when return_partials)."""
+    b, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    bk = min(bk, t)
+    assert t % bk == 0, (t, bk)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+
+    grid = (b, t // bk)
+    out, m, l = pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / math.sqrt(d), bk=bk, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki: (bi,)),
+            pl.BlockSpec((1, hq, d), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, d), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((1, hq, 1), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((1, hq, 1), lambda bi, ki: (bi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+            jax.ShapeDtypeStruct((b, hq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)
+    if return_partials:
+        return out, m[..., 0], l[..., 0]
+    return out
+
+
+def combine_partials(os, ms, ls):
+    """Merge per-shard flash-decode partials (leading shard axis).
+
+    os: [S,B,HQ,D] (un-normalised outputs are already normalised per shard,
+    so we re-weight by l); ms, ls: [S,B,HQ]."""
+    m_star = jnp.max(ms, axis=0)                      # [B,HQ]
+    w = ls * jnp.exp(ms - m_star)                     # [S,B,HQ]
+    denom = jnp.maximum(jnp.sum(w, axis=0), 1e-30)
+    o = jnp.sum(os.astype(jnp.float32) * w[..., None], axis=0) / denom[..., None]
+    return o.astype(os.dtype)

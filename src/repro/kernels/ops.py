@@ -1,0 +1,60 @@
+"""Jit'd public wrappers over the Pallas kernels (stable API for the model
+zoo and the FL core).  Each function dispatches to the kernel and is
+validated against ``repro.kernels.ref`` in tests/test_kernels.py."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dp_clip_noise as _dp
+from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
+from repro.kernels import rglru_scan as _rg
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    interpret: bool = True):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+
+
+def flash_decode(q, k, v, length, *, interpret: bool = True,
+                 return_partials: bool = False):
+    return _fd.flash_decode(q, k, v, length, interpret=interpret,
+                            return_partials=return_partials)
+
+
+combine_decode_partials = _fd.combine_partials
+
+
+def rglru_scan(a, x, h0=None, *, interpret: bool = True):
+    return _rg.rglru_scan(a, x, h0, interpret=interpret)
+
+
+def dp_clip_noise(x, noise, clip: float, sigma: float, *, interpret: bool = True):
+    return _dp.dp_clip_noise(x, noise, clip, sigma, interpret=interpret)
+
+
+def dp_clip_noise_tree(tree, key, clip: float, sigma: float, *,
+                       interpret: bool = True):
+    """Pytree version with a SHARED global norm (client-level DP contract —
+    identical semantics to core.dp.privatize_update(mode='clipped')).
+
+    Returns (noised_tree, pre_clip_global_norm)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    total = sum(
+        _dp.sumsq(l.reshape(-1), interpret=interpret) for l in leaves
+    )
+    norm = jnp.sqrt(total)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        noise = jax.random.normal(k, leaf.shape, jnp.float32)
+        out.append(
+            _dp.scale_noise(leaf, noise, scale, sigma=float(sigma),
+                            interpret=interpret)
+        )
+    return jax.tree.unflatten(treedef, out), norm

@@ -1,0 +1,204 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST run before any other import: jax locks the device count on first use.
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture × input shape) and both production meshes
+(16×16 single-pod, 2×16×16 multi-pod) this:
+
+  1. builds the step (FL train round / serve prefill / serve decode) with its
+     in/out shardings (launch/steps.py),
+  2. ``jax.jit(step, in_shardings, out_shardings).lower(*input_specs)`` —
+     ShapeDtypeStruct stand-ins, zero allocation,
+  3. ``.compile()`` — SPMD partitioning must succeed; sharding mismatches,
+     unsupported collectives or compile-time OOM are bugs,
+  4. records ``memory_analysis()`` / ``cost_analysis()`` / collective bytes
+     (parsed from the post-SPMD optimized HLO) into
+     ``benchmarks/artifacts/<arch>__<shape>__<mesh>.json``
+     — the roofline analysis (benchmarks/roofline.py) reads these.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite_3_8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, MeshConfig, get_arch, get_shape
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Post-SPMD HLO is per-partition, so these are bytes *per device* entering
+    the interconnect for each op instance (all-gather results count the
+    gathered size; all-reduce counts the reduced buffer once — a ~2x
+    ring-traffic underestimate that we keep consistent across archs).
+    """
+    out = {c: 0.0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for cname in _COLLECTIVES:
+            # match "<type> all-reduce(" etc. (avoid "-start/-done" dupes:
+            # count -start, skip -done)
+            if f" {cname}(" in rhs or f" {cname}-start(" in rhs or rhs.startswith(cname):
+                if f"{cname}-done" in rhs:
+                    continue
+                type_part = rhs.split(cname)[0]
+                nbytes = 0.0
+                for dt, dims in _SHAPE_RE.findall(type_part):
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    nbytes += n * _DTYPE_BYTES[dt]
+                out[cname] += nbytes
+                counts[cname] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def hbm_bytes_estimate(cost: dict) -> float:
+    return float(cost.get("bytes accessed", 0.0))
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *, save: bool = True,
+            step_kw=None, tag: str = "") -> dict:
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    mesh_cfg = MeshConfig(multi_pod=(mesh_kind == "multi"))
+    mesh = make_production_mesh(multi_pod=mesh_cfg.multi_pod)
+
+    t0 = time.time()
+    bundle = steps_lib.build_step(cfg, shape, mesh_cfg, mesh, **(step_kw or {}))
+    with mesh:
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+        )
+        lowered = jitted.lower(*bundle.in_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "step": bundle.name, "meta": bundle.meta,
+        "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": hbm_bytes_estimate(cost),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+        },
+        "collectives": coll,
+        "model_params": cfg.param_count(),
+        "model_active_params": cfg.active_param_count(),
+    }
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(ARTIFACT_DIR, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, (
+        "dry-run expects 512 forced host devices; do not import jax before this module"
+    )
+
+    pairs = (
+        [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for arch, shape in pairs:
+        for mk in meshes:
+            path = os.path.join(ARTIFACT_DIR, f"{arch}__{shape}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {arch} {shape} {mk}")
+                continue
+            try:
+                r = run_one(arch, shape, mk)
+                print(
+                    f"[ok]   {arch:24s} {shape:12s} {mk:6s} "
+                    f"compile={r['compile_s']:7.1f}s "
+                    f"flops={r['cost']['flops']:.3e} "
+                    f"peak={(r['memory']['peak_bytes'] or 0)/2**30:.2f}GiB "
+                    f"coll={r['collectives']['total']/2**30:.2f}GiB"
+                )
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape, mk, repr(e)))
+                print(f"[FAIL] {arch} {shape} {mk}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", *f[:3], f[3][:200])
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* the first
+jax initialisation, and smoke tests must keep seeing 1 device.
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod; the multi-pod
+configuration is 2 pods = 512 chips with a leading "pod" axis (DCN between
+pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over however many devices the host actually has (tests)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+# TPU v5e per-chip constants (roofline terms, EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (~)

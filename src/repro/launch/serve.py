@@ -1,0 +1,73 @@
+"""CLI: batched decode serving on an assigned architecture (host scale).
+
+PYTHONPATH=src python -m repro.launch.serve --arch recurrentgemma_9b \
+    --batch 4 --prompt-len 16 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models.model import build
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="mamba2_130m")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=not args.full)
+    model = build(cfg)
+    window = cfg.sliding_window
+    print(f"== serving {cfg.name} (window={window}) ==")
+
+    params = model.init(jax.random.key(args.seed))
+    cache_len = args.prompt_len + args.new_tokens
+    caches = model.init_cache(args.batch, cache_len, params=params, window=window)
+    decode = jax.jit(lambda p, t, c, i: model.decode_step(p, t, c, i, window=window))
+
+    key = jax.random.key(args.seed + 1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, jnp.int32)
+    t0 = time.time()
+    logits = None
+    for t in range(args.prompt_len):
+        logits, caches = decode(params, prompts[:, t:t + 1], caches, jnp.asarray(t))
+    t_prefill = time.time() - t0
+
+    def sample(lg, k):
+        lg = lg[:, 0, :cfg.vocab_size]
+        if args.temperature <= 0:
+            return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(k, lg / args.temperature)[:, None].astype(jnp.int32)
+
+    toks = []
+    t0 = time.time()
+    tok = sample(logits, key)
+    for t in range(args.prompt_len, cache_len):
+        toks.append(tok)
+        logits, caches = decode(params, tok, caches, jnp.asarray(t))
+        tok = sample(logits, jax.random.fold_in(key, t))
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    gen = jnp.concatenate(toks, axis=1)
+    print(f"  prefill {args.prompt_len} tokens: {t_prefill:.2f}s; "
+          f"decode {args.new_tokens} tokens: {t_decode:.2f}s "
+          f"({args.batch*args.new_tokens/t_decode:.1f} tok/s)")
+    for i in range(min(args.batch, 2)):
+        print(f"  request {i}: {np.asarray(gen[i])[:16].tolist()} ...")
+
+
+if __name__ == "__main__":
+    main()

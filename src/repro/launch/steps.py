@@ -1,0 +1,423 @@
+"""Step builders: (arch × input-shape × mesh) → lowered-ready jitted steps.
+
+Produces, for every combination, a ``StepBundle``:
+    fn            — the step function (FL round / prefill / decode)
+    in_specs      — ShapeDtypeStruct pytree of every input (no allocation)
+    in_shardings / out_shardings — NamedSharding pytrees for jax.jit
+so that ``launch/dryrun.py`` is a thin loop around
+``jit(fn, in_shardings, out_shardings).lower(*in_specs).compile()``.
+
+Execution-profile policy (DESIGN.md §4):
+    param_count < 10B  → client_parallel (clients on the data axes)
+    otherwise          → client_serial  (whole mesh per client, FSDP)
+grad_accum is chosen so the per-chip activation microbatch is ~1-2
+sequences for the ≥10B models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import FLConfig, MeshConfig, ModelConfig, ShapeConfig
+from repro.core import rounds as rounds_lib
+from repro.models.model import Model, build, effective_window
+from repro.models.sharding import logical_to_pspec, make_rules, sanitize_pspec
+from repro.models.shardctx import sharding_ctx
+
+PARALLEL_PLAN_MAX_PARAMS = 10e9
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    in_specs: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+
+def choose_plan(cfg: ModelConfig) -> str:
+    return (
+        "client_parallel"
+        if cfg.param_count() < PARALLEL_PLAN_MAX_PARAMS
+        else "client_serial"
+    )
+
+
+def choose_grad_accum(cfg: ModelConfig, per_shard_batch: int) -> int:
+    n = cfg.param_count()
+    if n >= 50e9:
+        target = 1
+    elif n >= 10e9:
+        target = 2
+    else:
+        return 1
+    return max(1, per_shard_batch // target)
+
+
+def make_fl_config(cfg: ModelConfig, plan: str, n_clients: int) -> FLConfig:
+    return FLConfig(
+        n_clients=n_clients,
+        # coherence scoring costs a params-size all-reduce per client in the
+        # parallel plan — keep it for sub-B models, off for multi-B LMs
+        coherence_scoring=cfg.param_count() < 1e9,
+        clients_per_round=max(2, n_clients // 4),
+        adaptive_k=True,
+        local_lr=0.01,
+        dp_enabled=True,
+        dp_mode="clipped",
+        dp_epsilon=8.0,
+        dp_clip=1.0,
+        fault_tolerance=True,
+        failure_prob=0.05,
+        plan=plan,
+        serial_clients_in_step=2,
+        local_steps_in_step=1,
+    )
+
+
+
+def _scan_correction(cfg: ModelConfig, mode: str, clients_scan: int = 1,
+                     local_steps: int = 1, grad_accum: int = 1) -> dict:
+    """XLA cost_analysis counts while-loop (scan) bodies ONCE, not x trips
+    (verified empirically — see EXPERIMENTS.md §Roofline).  We record the
+    known static trip structure so the roofline can correct HLO-derived
+    flops/bytes/collectives for the scanned stacks.
+
+    layers_mult is approximate for heterogeneous stacks (segments of
+    different super-blocks are averaged); exact for uniform ones.
+    """
+    segs = cfg.segments()
+    blocks_counted = sum(len(kinds) for kinds, _ in segs)
+    total_blocks = sum(len(kinds) * reps for kinds, reps in segs)
+    layers_mult = total_blocks / max(blocks_counted, 1)
+    if cfg.enc_layers:
+        # encoder scan (trip enc_layers) + decoder scan (trip n_layers),
+        # each counted once
+        layers_mult = (cfg.enc_layers + cfg.n_layers) / 2.0
+    product = layers_mult * clients_scan * local_steps * grad_accum
+    return {
+        "layers_mult": layers_mult,
+        "clients_scan": clients_scan,
+        "local_steps": local_steps,
+        "grad_accum": grad_accum,
+        "product": product,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(model: Model, rules: dict, mesh: Mesh):
+    axes = model.axes()
+    shapes = model.param_shapes()
+
+    def one(a, s):
+        return _ns(mesh, sanitize_pspec(s.shape, logical_to_pspec(a, rules), mesh))
+
+    return jax.tree.map(
+        one, axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            y is None or isinstance(y, str) for y in x
+        ),
+    )
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: _ns(mesh, P()), tree)
+
+
+def batch_axes(rules: dict):
+    ab = rules.get("act_batch")
+    return ab if ab else None
+
+
+def cache_shardings(cache_specs, rules: dict, mesh: Mesh, *,
+                    ssm_shard: str = "heads"):
+    """Decode-cache shardings by leaf name (DESIGN.md §5):
+      k/v   [L,B,C,H,D]  → batch over data axes, cache SEQ over model
+                            (context-parallel decode; kv heads replicated)
+      h     [L,B,W]      → recurrent width over model
+      conv  [L,B,K,C]    → channel dim over model
+      ssm   [L,B,H,P,N]  → ``ssm_shard``: "heads" puts model on H (falls back
+                            to replicated when H doesn't divide — e.g. 24
+                            heads on a 16-way axis); "state" puts it on N
+                            (the SSD state dim, 128 — always divides).
+    """
+    ab = batch_axes(rules)
+
+    def spec_for(path, leaf):
+        name = None
+        for pp in reversed(path):
+            if hasattr(pp, "key"):
+                name = str(pp.key)
+                break
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            s = P(None, ab, "model", None, None) if nd == 5 else P(ab, "model", None, None)
+        elif name == "h":
+            s = P(None, ab, "model") if nd == 3 else P(ab, "model")
+        elif name == "conv":
+            if ssm_shard == "state_convrep":
+                s = P(None, ab, None, None) if nd == 4 else P(ab, None, None)
+            else:
+                s = P(None, ab, None, "model") if nd == 4 else P(ab, None, "model")
+        elif name == "ssm":
+            if ssm_shard in ("state", "state_convrep"):
+                s = (P(None, ab, None, None, "model") if nd == 5
+                     else P(ab, None, None, "model"))
+            else:
+                s = (P(None, ab, "model", None, None) if nd == 5
+                     else P(ab, "model", None, None))
+        else:
+            s = P()
+        return _ns(mesh, sanitize_pspec(leaf.shape, s, mesh))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    return jax.tree_util.tree_unflatten(treedef, [spec_for(p, l) for p, l in flat])
+
+
+def _client_axes(mesh_cfg: MeshConfig):
+    return ("pod", "data") if mesh_cfg.multi_pod else ("data",)
+
+
+def _mesh_size(mesh_cfg: MeshConfig, axes) -> int:
+    sizes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    n = 1
+    for a in axes:
+        n *= sizes[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Train step (one FL communication round on the assigned architecture)
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+                     mesh: Mesh, *, plan: Optional[str] = None,
+                     grad_accum: Optional[int] = None,
+                     remat: str = "full",
+                     remat_group: int = 1,
+                     rules_override: Optional[dict] = None) -> StepBundle:
+    model = build(cfg)
+    plan = plan or choose_plan(cfg)
+    rules = dict(rules_override or make_rules(plan, mesh_cfg.multi_pod))
+    client_axes = _client_axes(mesh_cfg)
+    n_client_slots = _mesh_size(mesh_cfg, client_axes)
+    data_shards = _mesh_size(mesh_cfg, client_axes)
+
+    if plan == "client_parallel":
+        n_clients = n_client_slots
+        per_client_batch = max(1, shape.global_batch // n_clients)
+        ga = 1
+    else:
+        n_clients = 40  # paper's population; K slots folded into the step
+        per_client_batch = shape.global_batch
+        per_shard = max(1, per_client_batch // data_shards)
+        ga = grad_accum if grad_accum is not None else choose_grad_accum(cfg, per_shard)
+
+    fl = make_fl_config(cfg, plan, n_clients)
+    loss_fn = lambda p, b: model.loss(p, b, remat=remat, remat_group=remat_group)
+
+    # ---- input specs -------------------------------------------------------
+    base = model.input_specs(dataclasses.replace(shape, global_batch=per_client_batch))
+    steps = fl.local_steps_in_step
+    lead = (n_clients, steps) if plan == "client_parallel" else (
+        fl.serial_clients_in_step, steps)
+    batches = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), base
+    )
+
+    params_spec = model.param_shapes()
+    state_spec = jax.eval_shape(
+        lambda p: rounds_lib.init_round_state(p, fl, jax.random.key(0),
+                                              n_clients=n_clients),
+        params_spec,
+    )
+
+    # ---- shardings ---------------------------------------------------------
+    p_shard = param_shardings(model, rules, mesh)
+    state_shard = rounds_lib.RoundState(
+        params=p_shard,
+        server_opt_state=jax.tree.map(lambda _: _ns(mesh, P()),
+                                      state_spec.server_opt_state),
+        util=jax.tree.map(lambda _: _ns(mesh, P()), state_spec.util),
+        kctl=jax.tree.map(lambda _: _ns(mesh, P()), state_spec.kctl),
+        round_idx=_ns(mesh, P()),
+        rng=_ns(mesh, P()),
+    )
+    if plan == "client_parallel":
+        lead_spec = (client_axes, None)
+    else:
+        ab = rules.get("act_batch")
+        lead_spec = (None, None, ab)
+    batch_shard = jax.tree.map(
+        lambda s: _ns(mesh, sanitize_pspec(
+            s.shape, P(*(lead_spec + (None,) * (len(s.shape) - len(lead_spec)))), mesh)),
+        batches,
+    )
+
+    # ---- round builder ----------------------------------------------------
+    if plan == "client_parallel":
+        def delta_constraint(deltas, _axes=model.axes()):
+            def one(d, a):
+                # leading client axis pinned to the data mesh axes; inner
+                # dims follow the parameter's own logical sharding
+                inner = logical_to_pspec(tuple(a), rules)
+                full = P(client_axes, *tuple(inner))
+                return jax.lax.with_sharding_constraint(
+                    d, _ns(mesh, sanitize_pspec(d.shape, full, mesh)))
+
+            return jax.tree.map(
+                one, deltas, _axes,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    y is None or isinstance(y, str) for y in x),
+            )
+
+        round_step = rounds_lib.make_parallel_round(
+            loss_fn, fl, n_clients, grad_accum=ga, delta_constraint=delta_constraint
+        )
+        ctx_rules = None  # vmap over clients: no in-model constraints
+    else:
+        delta_dtype = jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32
+        round_step = rounds_lib.make_serial_round(
+            loss_fn, fl, n_clients, grad_accum=ga, delta_dtype=delta_dtype
+        )
+        ctx_rules = rules
+
+    def step(state, batches):
+        if ctx_rules is not None:
+            with sharding_ctx(ctx_rules, mesh):
+                return round_step(state, batches)
+        return round_step(state, batches)
+
+    metrics_spec = jax.eval_shape(step, state_spec, batches)[1]
+    out_shardings = (state_shard, jax.tree.map(lambda _: _ns(mesh, P()), metrics_spec))
+
+    tokens = (
+        n_clients * steps * per_client_batch * shape.seq_len
+        if plan == "client_parallel"
+        else fl.serial_clients_in_step * steps * per_client_batch * shape.seq_len
+    )
+    return StepBundle(
+        name=f"fl_round[{plan}]",
+        fn=step,
+        in_specs=(state_spec, batches),
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=out_shardings,
+        meta={
+            "plan": plan, "grad_accum": ga, "tokens_per_step": tokens,
+            "clients_in_step": (n_clients if plan == "client_parallel"
+                                else fl.serial_clients_in_step),
+            "per_client_batch": per_client_batch,
+            "scan": _scan_correction(
+                cfg, "train",
+                clients_scan=(1 if plan == "client_parallel"
+                              else fl.serial_clients_in_step),
+                local_steps=steps, grad_accum=ga,
+            ),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+                       mesh: Mesh,
+                       rules_override: Optional[dict] = None) -> StepBundle:
+    model = build(cfg)
+    rules = dict(rules_override or make_rules("client_serial", mesh_cfg.multi_pod))
+    window = effective_window(cfg, shape)
+
+    def step(params, batch):
+        with sharding_ctx(rules, mesh):
+            logits = model.forward(params, batch, window=window, last_only=True)
+        return logits
+
+    specs = model.input_specs(shape)
+    ab = rules.get("act_batch")
+    batch_shard = jax.tree.map(
+        lambda s: _ns(mesh, sanitize_pspec(
+            s.shape, P(*((ab,) + (None,) * (len(s.shape) - 1))), mesh)),
+        specs,
+    )
+    p_spec = model.param_shapes()
+    p_shard = param_shardings(model, rules, mesh)
+    out_spec = jax.eval_shape(step, p_spec, specs)
+    out_shard = _ns(mesh, sanitize_pspec(out_spec.shape, P(ab, None, "model"), mesh))
+    return StepBundle(
+        name="serve_prefill",
+        fn=step,
+        in_specs=(p_spec, specs),
+        in_shardings=(p_shard, batch_shard),
+        out_shardings=out_shard,
+        meta={"window": window,
+              "tokens_per_step": shape.global_batch * shape.seq_len,
+              "scan": _scan_correction(cfg, "prefill")},
+    )
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+                      mesh: Mesh,
+                      rules_override: Optional[dict] = None,
+                      ssm_shard: str = "state") -> StepBundle:
+    model = build(cfg)
+    rules = dict(rules_override or make_rules("client_serial", mesh_cfg.multi_pod))
+    window = effective_window(cfg, shape)
+
+    def step(params, token, caches, index):
+        with sharding_ctx(rules, mesh):
+            logits, new_caches = model.decode_step(params, token, caches, index,
+                                                   window=window)
+        return logits, new_caches
+
+    specs = model.input_specs(shape)
+    token_s, caches_s, index_s = specs["token"], specs["caches"], specs["index"]
+    ab = rules.get("act_batch")
+    p_spec = model.param_shapes()
+    p_shard = param_shardings(model, rules, mesh)
+    c_shard = cache_shardings(caches_s, rules, mesh, ssm_shard=ssm_shard)
+    t_shard = _ns(mesh, sanitize_pspec(token_s.shape, P(ab, None), mesh))
+    out_spec = jax.eval_shape(step, p_spec, token_s, caches_s, index_s)
+    logits_shard = _ns(mesh, sanitize_pspec(out_spec[0].shape, P(ab, None, "model"), mesh))
+    return StepBundle(
+        name="serve_decode",
+        fn=step,
+        in_specs=(p_spec, token_s, caches_s, index_s),
+        in_shardings=(p_shard, t_shard, c_shard, _ns(mesh, P())),
+        out_shardings=(logits_shard, c_shard),
+        meta={"window": window, "cache_len": shape.seq_len,
+              "tokens_per_step": shape.global_batch,
+              "scan": _scan_correction(cfg, "decode")},
+    )
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig, mesh: Mesh,
+               **kw) -> StepBundle:
+    if shape.mode == "train":
+        return build_train_step(cfg, shape, mesh_cfg, mesh, **kw)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg, shape, mesh_cfg, mesh, **kw)
+    return build_decode_step(cfg, shape, mesh_cfg, mesh, **kw)

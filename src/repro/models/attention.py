@@ -1,0 +1,178 @@
+"""GQA attention: prefill/train (full-causal or sliding-window) and
+single-token decode against a (possibly rolling) KV cache.
+
+The default path is pure jnp (XLA) — this is what the multi-pod dry-run
+lowers, since Mosaic kernels cannot lower on the CPU host backend.  The
+Pallas flash kernels in ``repro.kernels`` implement the same contract and are
+validated against these functions (``attention_impl="flash"`` selects them
+where supported).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.layers import apply_mrope, apply_rope, dense, init_dense
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    b = cfg.qkv_bias
+    return {
+        "wq": init_dense(kq, d, cfg.n_heads * hd, cfg, axes=("embed", "heads"), bias=b),
+        "wk": init_dense(kk, d, cfg.n_kv_heads * hd, cfg, axes=("embed", "kv"), bias=b),
+        "wv": init_dense(kv, d, cfg.n_kv_heads * hd, cfg, axes=("embed", "kv"), bias=b),
+        "wo": init_dense(ko, cfg.n_heads * hd, d, cfg, axes=("heads", "embed")),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _rope(q, k, positions, cfg):
+    if cfg.mrope_sections is not None:
+        # positions: [..., seq, 3]
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _sdpa(q, k, v, mask):
+    """q:[B,S,Hq,hd] k/v:[B,T,Hkv,hd] mask:[B,1,S,T] or broadcastable."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, hd).astype(v.dtype)
+
+
+def causal_mask(s: int, window: Optional[int] = None):
+    """[1,1,S,S] boolean mask; sliding window if requested."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m[None, None]
+
+
+def attention(params, x, positions, cfg, *, window=None, impl: str = "ref"):
+    """Full-sequence (train / prefill) self-attention.
+
+    x: [B,S,d]; positions: [B,S] (or [B,S,3] for M-RoPE).
+    Returns [B,S,d].
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(params["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(params["wv"], x), cfg.n_kv_heads, hd)
+    q, k = _rope(q, k, positions, cfg)
+    if impl == "flash":
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        out = _sdpa(q, k, v, causal_mask(x.shape[1], window))
+    return dense(params["wo"], out.reshape(out.shape[:2] + (-1,)))
+
+
+def encoder_attention(params, x, positions, cfg):
+    """Bidirectional self-attention (audio encoder)."""
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    k = _split_heads(dense(params["wk"], x), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(params["wv"], x), cfg.n_kv_heads, hd)
+    q, k = _rope(q, k, positions, cfg)
+    out = _sdpa(q, k, v, None)
+    return dense(params["wo"], out.reshape(out.shape[:2] + (-1,)))
+
+
+def cross_attention(params, x, enc_kv, cfg):
+    """Decoder->encoder cross attention.  enc_kv: (k, v) precomputed
+    [B,T,Hkv,hd] pair (computed once at prefill from encoder output)."""
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    k, v = enc_kv
+    out = _sdpa(q, k, v, None)
+    return dense(params["wo"], out.reshape(out.shape[:2] + (-1,)))
+
+
+def project_enc_kv(params, enc_out, cfg):
+    hd = cfg.resolved_head_dim
+    k = _split_heads(dense(params["wk"], enc_out), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(params["wv"], enc_out), cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode (one new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(params, x, cache, index, positions, cfg, *, window=None):
+    """One-step decode.
+
+    x: [B,1,d] current token hidden states.
+    cache: dict(k=[B,C,Hkv,hd], v=[B,C,Hkv,hd]) where C = full seq_len for
+        dense attention or the rolling window size for SWA.
+    index: [] int32 — number of tokens already in context.
+    positions: [B,1] (or [B,1,3]) position ids of the new token.
+    Returns (out [B,1,d], new_cache).
+    """
+    hd = cfg.resolved_head_dim
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    k_new = _split_heads(dense(params["wk"], x), cfg.n_kv_heads, hd)
+    v_new = _split_heads(dense(params["wv"], x), cfg.n_kv_heads, hd)
+    q, k_new = _rope(q, k_new, positions, cfg)
+
+    cache_len = cache["k"].shape[1]
+    slot = index % cache_len if window is not None else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    # valid positions: cache slots holding tokens <= index
+    j = jnp.arange(cache_len)
+    if window is None:
+        valid = j <= index
+    else:
+        # rolling buffer: before wrap-around only slots <= index hold tokens;
+        # once index >= cache_len every slot holds a token in the window.
+        valid = (j <= index) | (index >= cache_len)
+    mask = valid[None, None, None, :]  # [1,1,1,C]
+
+    b, s, hq, _ = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qs = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qs.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores / math.sqrt(hd)
+    scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    out = out.reshape(b, s, hq, hd).astype(x.dtype)
+    out = dense(params["wo"], out.reshape(b, s, -1))
+    return out, {"k": k, "v": v}
+
+
+def init_cache(cfg, batch, cache_len, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (batch, cache_len, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

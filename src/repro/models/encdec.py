@@ -1,0 +1,220 @@
+"""Encoder-decoder backbone (Seamless-M4T-style, audio use case).
+
+Per the assignment carve-out the audio frontend (mel-spectrogram + conv
+feature extractor) is a STUB: the encoder consumes precomputed frame
+embeddings [B, T_enc, d].  The encoder is a bidirectional transformer; the
+decoder is a causal transformer with per-layer cross-attention whose K/V are
+projected once from the encoder output and carried in the decode cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models.shardctx import constrain
+from repro.models.sharding import add_axis, pm, split_meta
+from repro.models.transformer import padded_vocab
+
+
+def _enc_block_init(key, cfg):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "ln1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+        "attn": attn_lib.init_attention(k2, cfg),
+        "ln2": L.init_rmsnorm(k3, cfg.d_model, cfg),
+        "mlp": L.init_mlp(k4, cfg),
+    }
+
+
+def _dec_block_init(key, cfg):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "ln1": L.init_rmsnorm(k1, cfg.d_model, cfg),
+        "self_attn": attn_lib.init_attention(k2, cfg),
+        "lnx": L.init_rmsnorm(k3, cfg.d_model, cfg),
+        "cross_attn": attn_lib.init_attention(k4, cfg),
+        "ln2": L.init_rmsnorm(k5, cfg.d_model, cfg),
+        "mlp": L.init_mlp(k6, cfg),
+    }
+
+
+def init_encdec_meta(key, cfg):
+    ke, kenc, kdec, kn1, kn2, kh = jax.random.split(key, 6)
+    pv = padded_vocab(cfg)
+    enc_stack = jax.vmap(lambda k: _enc_block_init(k, cfg))(
+        jax.random.split(kenc, cfg.enc_layers)
+    )
+    dec_stack = jax.vmap(lambda k: _dec_block_init(k, cfg))(
+        jax.random.split(kdec, cfg.n_layers)
+    )
+    meta: Dict[str, Any] = {
+        "embed": {
+            "table": pm(
+                L.normal_init(ke, (pv, cfg.d_model), jnp.dtype(cfg.dtype), 0.02),
+                "vocab", "embed",
+            )
+        },
+        "enc_stack": add_axis(enc_stack, "layers"),
+        "enc_ln": L.init_rmsnorm(kn1, cfg.d_model, cfg),
+        "dec_stack": add_axis(dec_stack, "layers"),
+        "final_ln": L.init_rmsnorm(kn2, cfg.d_model, cfg),
+        "head": {
+            "w": pm(
+                L.normal_init(kh, (cfg.d_model, pv), jnp.dtype(cfg.dtype), 0.02),
+                "embed", "vocab",
+            )
+        },
+    }
+    return meta
+
+
+def init_encdec(key, cfg):
+    return split_meta(init_encdec_meta(key, cfg))
+
+
+def encdec_axes(cfg):
+    meta = jax.eval_shape(lambda k: init_encdec_meta(k, cfg), jax.random.key(0))
+    return split_meta(meta)[1]
+
+
+def encode(params, cfg, enc_embeds, *, remat: str = "full"):
+    """enc_embeds: [B, T, d] stub-frontend frame embeddings -> [B, T, d]."""
+    x = enc_embeds.astype(jnp.dtype(cfg.dtype))
+    t = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32), x.shape[:1] + (t,))
+    x = constrain(x, "act_batch", "act_seq", None)
+
+    def body(carry, pl):
+        h = carry
+        a = attn_lib.encoder_attention(
+            pl["attn"], L.rmsnorm(pl["ln1"], h, cfg.norm_eps), positions, cfg
+        )
+        h = h + a
+        h = h + L.mlp(pl["mlp"], L.rmsnorm(pl["ln2"], h, cfg.norm_eps), cfg.act)
+        h = constrain(h, "act_batch", "act_seq", None)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=True)
+    x, _ = jax.lax.scan(body, x, params["enc_stack"])
+    return L.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def decode_train(params, cfg, tokens, enc_out, *, remat: str = "full", window=None,
+                 last_only: bool = False):
+    """Teacher-forced decoder pass.  Returns logits [B, S, V]."""
+    x = L.embed(params["embed"], tokens)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), x.shape[:1] + (s,))
+    x = constrain(x, "act_batch", "act_seq", None)
+
+    def body(carry, pl):
+        h = carry
+        a = attn_lib.attention(
+            pl["self_attn"], L.rmsnorm(pl["ln1"], h, cfg.norm_eps), positions, cfg,
+            window=window,
+        )
+        h = h + a
+        enc_kv = attn_lib.project_enc_kv(pl["cross_attn"], enc_out, cfg)
+        c = attn_lib.cross_attention(
+            pl["cross_attn"], L.rmsnorm(pl["lnx"], h, cfg.norm_eps), enc_kv, cfg
+        )
+        h = h + c
+        h = h + L.mlp(pl["mlp"], L.rmsnorm(pl["ln2"], h, cfg.norm_eps), cfg.act)
+        h = constrain(h, "act_batch", "act_seq", None)
+        return h, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=True)
+    x, _ = jax.lax.scan(body, x, params["dec_stack"])
+    if last_only:
+        x = x[:, -1:]
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32), params["head"]["w"].astype(jnp.float32)
+    )
+    return _mask_pad(logits, cfg)
+
+
+def _mask_pad(logits, cfg):
+    pv, v = logits.shape[-1], cfg.vocab_size
+    if pv != v:
+        neg = jnp.full(logits.shape[:-1] + (pv - v,), -1e30, logits.dtype)
+        logits = jnp.concatenate([logits[..., :v], neg], axis=-1)
+    return logits
+
+
+def encdec_forward(params, cfg, enc_embeds, tokens, *, remat="full", window=None,
+                   last_only=False):
+    enc_out = encode(params, cfg, enc_embeds, remat=remat)
+    logits = decode_train(params, cfg, tokens, enc_out, remat=remat, window=window,
+                          last_only=last_only)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def encdec_loss(params, cfg, enc_embeds, tokens, labels, *, remat="full"):
+    logits, _ = encdec_forward(params, cfg, enc_embeds, tokens, remat=remat)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(params, cfg, batch: int, cache_len: int, enc_out=None, window=None):
+    """Self-attn rolling/full cache + cross-attn K/V projected from enc_out.
+
+    When enc_out is None (dry-run input_specs) callers build the same pytree
+    from ShapeDtypeStructs instead.
+    """
+    clen = min(cache_len, window) if window else cache_len
+    self_cache = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+        attn_lib.init_cache(cfg, batch, clen),
+    )
+
+    def per_layer_kv(pl):
+        k, v = attn_lib.project_enc_kv(pl["cross_attn"], enc_out, cfg)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer_kv, in_axes=(0,))(params["dec_stack"])
+    return {"self": self_cache, "cross": cross}
+
+
+def encdec_decode_step(params, cfg, token, caches, index, *, window=None):
+    """One-token decode.  token: [B,1].  Returns (logits, new_caches)."""
+    x = L.embed(params["embed"], token)
+    positions = jnp.broadcast_to(index.astype(jnp.int32), token.shape)
+
+    def body(carry, xs):
+        h = carry
+        pl, self_c, cross_c = xs
+        a, new_self = attn_lib.decode_attention(
+            pl["self_attn"], L.rmsnorm(pl["ln1"], h, cfg.norm_eps), self_c, index,
+            positions, cfg, window=window,
+        )
+        h = h + a
+        c = attn_lib.cross_attention(
+            pl["cross_attn"],
+            L.rmsnorm(pl["lnx"], h, cfg.norm_eps),
+            (cross_c["k"], cross_c["v"]),
+            cfg,
+        )
+        h = h + c
+        h = h + L.mlp(pl["mlp"], L.rmsnorm(pl["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, new_self
+
+    x, new_self = jax.lax.scan(body, x, (params["dec_stack"], caches["self"], caches["cross"]))
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32), params["head"]["w"].astype(jnp.float32)
+    )
+    return _mask_pad(logits, cfg), {"self": new_self, "cross": caches["cross"]}

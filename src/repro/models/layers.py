@@ -1,0 +1,182 @@
+"""Core neural-net layers (pure functions + explicit param pytrees).
+
+Every ``init_*`` returns a pytree of :class:`ParamMeta` (value + logical
+sharding axes); ``repro.models.sharding.split_meta`` separates values from
+axis metadata.  Apply functions take the *value* pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import pm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def normal_init(key, shape, dtype, stddev):
+    return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return normal_init(key, shape, dtype, 1.0 / math.sqrt(max(fan_in, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Normalisation
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(key, d, cfg):
+    del key
+    return {"scale": pm(jnp.ones((d,), _dtype(cfg)), "embed")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(key, d, cfg):
+    del key
+    dt = _dtype(cfg)
+    return {"scale": pm(jnp.ones((d,), dt), "embed"), "bias": pm(jnp.zeros((d,), dt), "embed")}
+
+
+def layernorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, d_in, d_out, cfg, axes=("embed", "mlp"), bias=False):
+    dt = _dtype(cfg)
+    p = {"w": pm(fan_in_init(key, (d_in, d_out), dt), *axes)}
+    if bias:
+        p["b"] = pm(jnp.zeros((d_out,), dt), axes[1])
+    return p
+
+
+def dense(params, x):
+    y = jnp.einsum("...i,io->...o", x, params["w"])
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+def init_embedding(key, vocab, d, cfg):
+    dt = _dtype(cfg)
+    return {"table": pm(normal_init(key, (vocab, d), dt, 0.02), "vocab", "embed")}
+
+
+def embed(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def unembed(params, x):
+    """Project hidden states to logits with the (tied or separate) table."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta**exponents)  # [head_dim//2]
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int32)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, sections: Tuple[int, int, int], theta: float = 10_000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: [..., seq, 3] (temporal, height, width position ids).
+    ``sections`` splits the head_dim//2 frequency bands between t/h/w.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)  # [half]
+    # choose which positional stream drives each frequency band
+    sec_ids = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # [half] in {0,1,2}
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),
+        jnp.broadcast_to(sec_ids, positions_3d.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # [..., seq, half]
+    angles = pos * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d_model=None, d_ff=None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi": init_dense(k1, d, f, cfg, axes=("embed", "mlp")),
+            "wg": init_dense(k2, d, f, cfg, axes=("embed", "mlp")),
+            "wo": init_dense(k3, f, d, cfg, axes=("mlp", "embed")),
+        }
+    return {
+        "wi": init_dense(k1, d, f, cfg, axes=("embed", "mlp")),
+        "wo": init_dense(k3, f, d, cfg, axes=("mlp", "embed")),
+    }
+
+
+def mlp(params, x, act: str):
+    h = dense(params["wi"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(params["wg"], x)) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(dense(params["wg"], x)) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.relu(h)
+    return dense(params["wo"], h)

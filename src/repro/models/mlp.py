@@ -1,0 +1,86 @@
+"""The paper's own detector model: a feed-forward network for tabular
+network-traffic features (Marfo et al. 2022, ref [1] of the paper).
+
+Binary/multiclass anomaly detector: d_in -> hidden -> hidden/2 -> n_classes
+with ReLU + dropout-free deterministic eval (FL rounds are short; the paper
+reports no dropout).  Kept deliberately simple & faithful — the large
+assigned architectures exercise the framework's scale path instead.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import pm, split_meta
+
+
+def init_mlp_meta(key, d_in: int, hidden: int, n_classes: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lin(k, a, b):
+        w = jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a)
+        return {"w": pm(w, "embed", "mlp"), "b": pm(jnp.zeros((b,), jnp.float32), "mlp")}
+
+    return {
+        "l1": lin(k1, d_in, hidden),
+        "l2": lin(k2, hidden, hidden // 2),
+        "out": lin(k3, hidden // 2, n_classes),
+    }
+
+
+def init_mlp(key, d_in: int, hidden: int = 128, n_classes: int = 2):
+    return split_meta(init_mlp_meta(key, d_in, hidden, n_classes))[0]
+
+
+def mlp_logits(params, x):
+    h = jax.nn.relu(x @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return h @ params["out"]["w"] + params["out"]["b"]
+
+
+def mlp_loss(params, batch):
+    """batch: {"x": [b, d], "y": [b] int32} -> mean CE."""
+    logits = mlp_logits(params, batch["x"])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def mlp_predict_proba(params, x):
+    return jax.nn.softmax(mlp_logits(params, x), axis=-1)
+
+
+def accuracy(params, x, y) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(mlp_logits(params, x), axis=-1) == y).astype(jnp.float32))
+
+
+def auc_roc(scores, labels) -> float:
+    """Rank-based AUC-ROC (equivalent to the Mann-Whitney U statistic
+    normalisation) — no sklearn in this environment."""
+    import numpy as np
+
+    s = np.asarray(scores, dtype=np.float64)
+    y = np.asarray(labels)
+    pos = s[y == 1]
+    neg = s[y == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    order = np.argsort(np.concatenate([neg, pos]), kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(order) + 1)
+    # average ranks for ties
+    allv = np.concatenate([neg, pos])
+    sorted_v = allv[order]
+    i = 0
+    while i < len(sorted_v):
+        j = i
+        while j + 1 < len(sorted_v) and sorted_v[j + 1] == sorted_v[i]:
+            j += 1
+        if j > i:
+            ranks[order[i : j + 1]] = np.mean(ranks[order[i : j + 1]])
+        i = j + 1
+    r_pos = ranks[len(neg):].sum()
+    u = r_pos - len(pos) * (len(pos) + 1) / 2.0
+    return float(u / (len(pos) * len(neg)))

@@ -1,0 +1,198 @@
+"""Unified model API over all assigned families.
+
+``build(cfg)`` returns a :class:`Model` exposing
+  init / axes / loss / forward / decode_step / init_cache / input_specs
+uniformly, so the FL round engine, the launcher and the dry-run never branch
+on family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as E
+from repro.models import transformer as T
+
+
+def parse_long_variant(cfg: ModelConfig) -> Optional[int]:
+    """'swa-4096' -> 4096."""
+    if cfg.long_context_variant and cfg.long_context_variant.startswith("swa-"):
+        return int(cfg.long_context_variant.split("-")[1])
+    return None
+
+
+def effective_window(cfg: ModelConfig, shape: Optional[ShapeConfig]) -> Optional[int]:
+    """Attention window override for a given input shape.
+
+    For ``long_500k`` full-attention archs run their explicitly-labeled
+    sliding-window variant (DESIGN.md §5); all other shapes use the published
+    attention (cfg.sliding_window, usually None).
+    """
+    if shape is not None and shape.name == "long_500k" and cfg.family != "ssm":
+        if cfg.sliding_window is not None:
+            return cfg.sliding_window
+        return parse_long_variant(cfg)
+    return cfg.sliding_window
+
+
+def mrope_positions(batch: int, n_front: int, n_text: int, grid_w: int = 16):
+    """Qwen2-VL style (t, h, w) position ids for [image patches; text]."""
+    img_i = jnp.arange(n_front, dtype=jnp.int32)
+    img = jnp.stack([jnp.zeros_like(img_i), img_i // grid_w, img_i % grid_w], axis=-1)
+    txt_i = jnp.arange(n_text, dtype=jnp.int32) + (n_front // grid_w)
+    txt = jnp.stack([txt_i, txt_i, txt_i], axis=-1)
+    pos = jnp.concatenate([img, txt], axis=0)
+    return jnp.broadcast_to(pos, (batch,) + pos.shape)
+
+
+class Model:
+    """Family-dispatching wrapper (stateless; params are explicit)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.enc_layers > 0
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key):
+        if self.is_encdec:
+            return E.init_encdec(key, self.cfg)[0]
+        return T.init_lm(key, self.cfg)[0]
+
+    def axes(self):
+        if self.is_encdec:
+            return E.encdec_axes(self.cfg)
+        return T.lm_axes(self.cfg)
+
+    def param_shapes(self):
+        if self.is_encdec:
+            meta = jax.eval_shape(
+                lambda k: E.init_encdec_meta(k, self.cfg), jax.random.key(0)
+            )
+            from repro.models.sharding import split_meta
+
+            return split_meta(meta)[0]
+        return T.lm_param_shapes(self.cfg)
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any], *, remat="full", impl="ref",
+             remat_group=1):
+        cfg = self.cfg
+        if self.is_encdec:
+            return E.encdec_loss(
+                params, cfg, batch["frontend"], batch["tokens"], batch["labels"], remat=remat
+            )
+        extra = batch.get("frontend")
+        if cfg.mrope_sections is not None and extra is not None:
+            # VLM: build 3-D positions for [patches; text]
+            b, n_text = batch["tokens"].shape
+            pos = mrope_positions(b, extra.shape[1], n_text)
+            logits, aux = T.lm_forward(
+                params, cfg, batch["tokens"], pos, extra_embeds=extra,
+                mode="train", remat=remat, impl=impl,
+            )
+            logits = logits[:, extra.shape[1]:]
+            labels = batch["labels"]
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(
+                logits, jnp.maximum(labels, 0)[..., None], axis=-1
+            )[..., 0]
+            mask = (labels >= 0).astype(jnp.float32)
+            return jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0) + aux
+        return T.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"],
+            remat=remat, impl=impl, extra_embeds=extra, remat_group=remat_group,
+        )
+
+    # -- inference ----------------------------------------------------------
+    def forward(self, params, batch, *, remat="none", impl="ref", window=None,
+                last_only=False):
+        cfg = self.cfg
+        if self.is_encdec:
+            return E.encdec_forward(
+                params, cfg, batch["frontend"], batch["tokens"], remat=remat,
+                window=window, last_only=last_only,
+            )[0]
+        extra = batch.get("frontend")
+        pos = None
+        if cfg.mrope_sections is not None and extra is not None:
+            pos = mrope_positions(batch["tokens"].shape[0], extra.shape[1],
+                                  batch["tokens"].shape[1])
+        logits, _ = T.lm_forward(
+            params, cfg, batch["tokens"], pos, extra_embeds=extra,
+            mode="prefill", remat=remat, impl=impl, window_override=window,
+            last_only=last_only,
+        )
+        return logits
+
+    def decode_step(self, params, token, caches, index, *, window=None):
+        cfg = self.cfg
+        if self.is_encdec:
+            return E.encdec_decode_step(params, cfg, token, caches, index, window=window)
+        return T.lm_decode_step(params, cfg, token, caches, index, window_override=window)
+
+    def init_cache(self, batch: int, cache_len: int, *, window=None, params=None,
+                   enc_out=None):
+        cfg = self.cfg
+        if self.is_encdec:
+            if enc_out is None:
+                enc_out = jnp.zeros((batch, cfg.enc_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+            return E.init_decode_cache(params, cfg, batch, cache_len, enc_out, window=window)
+        return T.stack_cache(cfg, batch, cache_len, window_override=window)
+
+    def cache_specs(self, batch: int, cache_len: int, *, window=None):
+        """ShapeDtypeStruct tree of the decode cache (no allocation)."""
+        if self.is_encdec:
+            pshapes = self.param_shapes()
+            return jax.eval_shape(
+                lambda p: self.init_cache(batch, cache_len, window=window, params=p),
+                pshapes,
+            )
+        return jax.eval_shape(lambda: self.init_cache(batch, cache_len, window=window))
+
+    # -- dry-run input specs --------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a step."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        dt = jnp.dtype(cfg.dtype)
+        window = effective_window(cfg, shape)
+
+        if shape.mode in ("train", "prefill"):
+            if self.is_encdec:
+                return {
+                    "frontend": sd((b, cfg.enc_seq, cfg.d_model), dt),
+                    "tokens": sd((b, s), i32),
+                    "labels": sd((b, s), i32),
+                }
+            specs = {}
+            n_text = s
+            if cfg.frontend != "none" and cfg.frontend_tokens:
+                n_text = s - cfg.frontend_tokens
+                specs["frontend"] = sd((b, cfg.frontend_tokens, cfg.d_model), dt)
+            specs["tokens"] = sd((b, n_text), i32)
+            specs["labels"] = sd((b, n_text), i32)
+            if shape.mode == "prefill":
+                specs.pop("labels")
+            return specs
+
+        # decode: one new token against a cache of seq_len context
+        caches = jax.tree.map(
+            lambda x: sd(x.shape, x.dtype),
+            self.cache_specs(b, s, window=window),
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, dict),
+        )
+        return {
+            "token": sd((b, 1), i32),
+            "caches": caches,
+            "index": sd((), i32),
+        }
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,183 @@
+"""Mixture-of-Experts layer (GShard/Switch-style dense einsum dispatch).
+
+TPU-native formulation: routing + capacity-bounded one-hot dispatch expressed
+as einsums so GSPMD turns the expert dimension (sharded over the ``model``
+mesh axis) into all-to-all / all-gather collectives — no per-expert gather
+loops.  Supports top-1 (Llama-4 Maverick) and top-2 (Phi-3.5-MoE) routing
+with a load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init
+from repro.models.sharding import pm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = _dtype(cfg)
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    p = {
+        "router": pm(fan_in_init(kr, (d, e), jnp.float32), "embed", None),
+        "wi": pm(fan_in_init(ki, (e, d, f), dt), "experts", "embed", "mlp"),
+        "wo": pm(fan_in_init(ko, (e, f, d), dt, fan_in=f), "experts", "mlp", "embed"),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        p["wg"] = pm(fan_in_init(kg, (e, d, f), dt), "experts", "embed", "mlp")
+    return p
+
+
+def _capacity(cfg, tokens_per_group: int) -> int:
+    cap = int(cfg.capacity_factor * tokens_per_group * cfg.experts_per_token / cfg.n_experts)
+    return max(cap, cfg.experts_per_token, 1)
+
+
+def route(router_w, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Top-k routing with capacity.
+
+    x: [b, s, d] -> (dispatch [b,s,e,c] bool, combine [b,s,e,c] f32, aux loss).
+    """
+    b, s, _ = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    c = _capacity(cfg, s)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router_w)
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    # iterative top-k expert choice
+    masks = []
+    gvals = []
+    g = gates
+    for _ in range(k):
+        idx = jnp.argmax(g, axis=-1)  # [b,s]
+        m = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        masks.append(m)
+        gvals.append(jnp.sum(g * m, axis=-1))
+        g = g * (1.0 - m)
+
+    # load-balance aux loss (Switch): e * sum_e fraction_e * prob_e
+    frac = jnp.mean(masks[0], axis=(0, 1))
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(frac * prob) * cfg.router_aux_coef
+
+    # capacity assignment: position of each token in its expert's queue
+    dispatch = jnp.zeros((b, s, e, c), jnp.float32)
+    combine = jnp.zeros((b, s, e, c), jnp.float32)
+    prior = jnp.zeros((b, 1, e), jnp.float32)
+    for m, gv in zip(masks, gvals):
+        pos = jnp.cumsum(m, axis=1) - m + prior  # [b,s,e]
+        keep = (pos < c) * m
+        prior = prior + jnp.sum(m, axis=1, keepdims=True)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), c, dtype=jnp.float32)  # [b,s,e,c]
+        dispatch = dispatch + keep[..., None] * pos_oh
+        combine = combine + (keep * gv[..., None])[..., None] * pos_oh
+
+    # renormalise top-k gates over the kept experts
+    denom = jnp.sum(combine, axis=(2, 3), keepdims=True)
+    combine = combine / jnp.maximum(denom, 1e-9)
+    return dispatch, combine, aux
+
+
+def moe_mlp(params, x, cfg, impl: str = "einsum"):
+    """x: [b, s, d] -> ([b, s, d], aux_loss).
+
+    impl="einsum": GShard one-hot dispatch (baseline — all-MXU, but the
+    dispatch/combine einsums cost O(B·S·E·C·d) FLOPs, comparable to the
+    expert matmuls themselves for top-1/128-expert configs).
+    impl="scatter": index-based dispatch — scatter tokens into the expert
+    buffers and gather the results back; removes the E×C one-hot contraction
+    entirely (EXPERIMENTS.md §Perf C1).
+    """
+    if impl == "scatter":
+        return _moe_mlp_scatter(params, x, cfg)
+    dispatch, combine, aux = route(params["router"], x, cfg)
+    # dispatch tokens to expert buffers: [e, b, c, d]
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)
+    h = jnp.einsum("ebcd,edf->ebcf", xe, params["wi"])
+    if "wg" in params:
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ebcd,edf->ebcf", xe, params["wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    ye = jnp.einsum("ebcf,efd->ebcd", h, params["wo"])
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), ye)
+    return y, aux
+
+
+def _experts_forward(params, xe, cfg):
+    """xe: [e, b, c, d] -> [e, b, c, d] through the per-expert MLPs."""
+    h = jnp.einsum("ebcd,edf->ebcf", xe, params["wi"])
+    if "wg" in params:
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ebcd,edf->ebcf", xe, params["wg"])) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("ebcf,efd->ebcd", h, params["wo"])
+
+
+def _moe_mlp_scatter(params, x, cfg):
+    """Scatter/gather dispatch: no O(E·C) one-hot contractions.
+
+    Routing (top-k choice, capacity positions, aux loss) is identical to
+    :func:`route`; only the token movement changes: tokens are scattered
+    into [e, b, cap, d] buffers with ``.at[].add`` and results gathered back
+    with ``take_along_axis`` — O(tokens·d) data movement, zero MXU flops.
+    """
+    b, s, _ = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    c = _capacity(cfg, s)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+
+    masks, gvals, idxs = [], [], []
+    g = gates
+    for _ in range(k):
+        idx = jnp.argmax(g, axis=-1)
+        m = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+        masks.append(m)
+        gvals.append(jnp.sum(g * m, axis=-1))
+        idxs.append(idx)
+        g = g * (1.0 - m)
+
+    frac = jnp.mean(masks[0], axis=(0, 1))
+    prob = jnp.mean(gates, axis=(0, 1))
+    aux = e * jnp.sum(frac * prob) * cfg.router_aux_coef
+
+    # capacity positions per (token, choice): cumsum of the one-hot masks
+    xe = jnp.zeros((e, b, c, x.shape[-1]), x.dtype)
+    prior = jnp.zeros((b, 1, e), jnp.float32)
+    keeps, poss = [], []
+    for m in masks:
+        pos = jnp.cumsum(m, axis=1) - m + prior          # [b,s,e]
+        prior = prior + jnp.sum(m, axis=1, keepdims=True)
+        pos_tok = jnp.sum(pos * m, axis=-1).astype(jnp.int32)  # [b,s]
+        keep = (pos_tok < c) & (jnp.sum(m, axis=-1) > 0)
+        keeps.append(keep)
+        poss.append(jnp.where(keep, pos_tok, c - 1))
+
+    bi = jnp.arange(b)[:, None] * jnp.ones((1, s), jnp.int32)
+    for idx, keep, pos in zip(idxs, keeps, poss):
+        contrib = jnp.where(keep[..., None], x, 0)
+        xe = xe.at[idx, bi, pos].add(contrib)
+
+    ye = _experts_forward(params, xe, cfg)
+
+    # gather back + gate-weighted combine (renormalised over kept experts)
+    outs, weights = [], []
+    for idx, keep, pos, gv in zip(idxs, keeps, poss, gvals):
+        got = ye[idx, bi, pos]                           # [b,s,d]
+        w = gv * keep
+        outs.append(got * w[..., None].astype(got.dtype))
+        weights.append(w)
+    denom = jnp.maximum(sum(weights), 1e-9)[..., None].astype(x.dtype)
+    y = sum(outs) / denom
+    return y, aux

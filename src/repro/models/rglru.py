@@ -1,0 +1,136 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Λ) * r_t)       learned decay, c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t²) * (i_t ⊙ x_t)
+
+Train path uses ``jax.lax.associative_scan`` over the sequence (log-depth on
+TPU); decode is the single-step recurrence.  The full residual block is
+    x -> [W_in -> causal conv(4) -> RG-LRU] ⊙ gelu(W_gate x) -> W_out
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init
+from repro.models.sharding import pm
+
+_C = 8.0
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def lru_width(cfg):
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    w = lru_width(cfg)
+    dt = _dtype(cfg)
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    return {
+        "w_in": pm(fan_in_init(k1, (d, w), dt), "embed", "mlp"),
+        "w_gate": pm(fan_in_init(k2, (d, w), dt), "embed", "mlp"),
+        "conv_w": pm(fan_in_init(k3, (cfg.conv_width, w), dt), None, "mlp"),
+        "conv_b": pm(jnp.zeros((w,), dt), "mlp"),
+        # RG-LRU gates (diagonal parameterisation)
+        "wa": pm(fan_in_init(k4, (w, w), jnp.float32), "mlp", None),
+        "ba": pm(jnp.zeros((w,), jnp.float32), None),
+        "wx": pm(fan_in_init(k5, (w, w), jnp.float32), "mlp", None),
+        "bx": pm(jnp.zeros((w,), jnp.float32), None),
+        # Λ init so that a ≈ uniform(0.9, 0.999) at r=1 (paper §2.4)
+        "lam": pm(
+            jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+            None,
+        ),
+        "w_out": pm(fan_in_init(k6, (w, d), dt), "mlp", "embed"),
+    }
+
+
+def _gates(params, x):
+    """x: [b, l, w] (f32) -> (a_t [b,l,w], gated input [b,l,w])."""
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", x, params["wa"]) + params["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", x, params["wx"]) + params["bx"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r  # [b,l,w], <= 0
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    return a, x_in
+
+
+def rglru_scan(a, x_in, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + x_t via associative scan.
+
+    a, x_in: [b, l, w]; h0: [b, w] or None. Returns (h [b,l,w], h_last [b,w]).
+    """
+    if h0 is not None:
+        x_in = x_in.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, x1 = lhs
+        a2, x2 = rhs
+        return a1 * a2, a2 * x1 + x2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, x_in), axis=1)
+    return h, h[:, -1]
+
+
+def _causal_conv(x, w, b, state=None):
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return out, new_state
+
+
+def rglru_block(params, x, cfg, state=None, impl: str = "ref"):
+    """Full recurrent residual-branch.  x: [b, l, d] -> ([b, l, d], cache).
+
+    cache = {"h": [b, w] f32, "conv": [b, k-1, w]}
+    """
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, params["w_gate"]))
+    u = jnp.einsum("bld,dw->blw", x, params["w_in"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], conv_state)
+    uf = u.astype(jnp.float32)
+    a, x_in = _gates(params, uf)
+    h0 = state["h"] if state is not None else None
+    if impl == "flash":
+        from repro.kernels import ops as kops
+
+        h, h_last = kops.rglru_scan(a, x_in, h0)
+    else:
+        h, h_last = rglru_scan(a, x_in, h0)
+    y = h.astype(x.dtype) * gate
+    out = jnp.einsum("blw,wd->bld", y, params["w_out"])
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def rglru_decode_step(params, x, cache, cfg):
+    """One-token step.  x: [b, 1, d]."""
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, params["w_gate"]))
+    u = jnp.einsum("bld,dw->blw", x, params["w_in"])
+    u, new_conv = _causal_conv(u, params["conv_w"], params["conv_b"], cache["conv"])
+    uf = u.astype(jnp.float32)
+    a, x_in = _gates(params, uf)
+    h = a[:, 0] * cache["h"] + x_in[:, 0]  # [b, w]
+    y = h[:, None].astype(x.dtype) * gate
+    out = jnp.einsum("blw,wd->bld", y, params["w_out"])
+    return out, {"h": h, "conv": new_conv}
+
+
+def init_rglru_cache(cfg, batch):
+    w = lru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.bfloat16),
+    }

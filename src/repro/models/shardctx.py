@@ -1,0 +1,46 @@
+"""Activation-sharding context.
+
+Step builders (launch/, core/rounds.py) install a rule table + mesh; model
+code calls :func:`constrain` with *logical* axis names.  Outside any context
+(CPU unit tests) ``constrain`` is the identity, so the model zoo stays
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.sharding import logical_to_pspec, sanitize_pspec
+
+_STATE = {"rules": None, "mesh": None}
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules: dict, mesh: Optional[Mesh] = None):
+    prev = dict(_STATE)
+    _STATE["rules"] = rules
+    _STATE["mesh"] = mesh
+    try:
+        yield
+    finally:
+        _STATE.update(prev)
+
+
+def active() -> bool:
+    return _STATE["rules"] is not None
+
+
+def constrain(x, *logical_axes):
+    """Apply a with_sharding_constraint described by logical axis names."""
+    rules = _STATE["rules"]
+    if rules is None:
+        return x
+    spec = logical_to_pspec(tuple(logical_axes), rules)
+    mesh = _STATE["mesh"]
+    if mesh is not None:
+        spec = sanitize_pspec(x.shape, spec, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, spec)

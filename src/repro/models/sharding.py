@@ -1,0 +1,203 @@
+"""Logical-axis sharding: params carry logical axis names, a rule table maps
+them to mesh axes (MaxText-style), and helpers convert whole pytrees into
+``PartitionSpec`` trees for ``jax.jit`` in/out shardings.
+
+Logical axes used by the model zoo:
+  "embed"    d_model dimension of weight matrices (FSDP candidate)
+  "mlp"      d_ff dimension                      (tensor parallel)
+  "heads"    query-head dimension                (tensor parallel)
+  "kv"       kv-head dimension (may be < mesh model size -> replicated)
+  "vocab"    vocabulary dimension                (tensor parallel)
+  "experts"  MoE expert dimension                (expert parallel)
+  "layers"   stacked-scan layer dimension        (never sharded)
+  "act_batch"  activation batch                  (data parallel)
+  "act_seq"    activation sequence               (context parallel, decode KV)
+  None       replicated
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+class ParamMeta:
+    """A parameter value bundled with its logical axis names.
+
+    Registered as a pytree node whose only child is ``value`` and whose
+    ``axes`` are static aux-data, so ``vmap`` / ``eval_shape`` / ``scan``
+    transparently batch the value while preserving the logical axes.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"ParamMeta({shape}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    ParamMeta,
+    lambda m: ((m.value,), m.axes),
+    lambda axes, children: ParamMeta(children[0], axes),
+)
+
+
+def pm(value, *axes):
+    assert value.ndim == len(axes), (value.shape, axes)
+    return ParamMeta(value, tuple(axes))
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def split_meta(tree):
+    """Split a pytree of ParamMeta into (values, logical_axes) pytrees."""
+    vals = jax.tree.map(lambda m: m.value, tree, is_leaf=is_meta)
+    axes = jax.tree.map(lambda m: m.axes, tree, is_leaf=is_meta)
+    return vals, axes
+
+
+def add_axis(meta_tree, name: str = "layers"):
+    """Prepend a stacked (scan) axis to every ParamMeta in a tree."""
+    return jax.tree.map(
+        lambda m: ParamMeta(m.value, (name,) + m.axes), meta_tree, is_leaf=is_meta
+    )
+
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# client_serial plan: the whole mesh co-trains one client -> FSDP over data.
+RULES_SERIAL = {
+    "embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": None,
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": None,
+    "act_batch": ("data",),
+    # sequence parallelism is an opt-in override (EXPERIMENTS.md §Perf A1) —
+    # None keeps the residual stream replicated across the model axis
+    "act_seq": None,
+    "ssm_state": None,
+}
+
+# client_parallel plan: clients live on the data axis -> per-client weights
+# must NOT be sharded over data (they diverge per client).
+RULES_PARALLEL = {
+    "embed": None,
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": None,
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": None,
+    "act_batch": ("data",),
+    "act_seq": None,
+    "ssm_state": None,
+}
+
+
+def with_pod(rules: dict, multi_pod: bool, plan: str) -> dict:
+    """Extend a rule table with the 'pod' axis for the 2x16x16 mesh.
+
+    client_serial: pod joins the FSDP/data-parallel group (one giant client
+    mesh).  client_parallel: pod multiplies the client axis, so activations
+    shard over (pod, data) while weights stay unsharded over both.
+    """
+    if not multi_pod:
+        return rules
+    r = dict(rules)
+    if plan == "client_serial":
+        if r["embed"]:
+            r["embed"] = ("pod", "data")
+        r["act_batch"] = ("pod", "data")
+    else:
+        r["act_batch"] = ("pod", "data")
+    return r
+
+
+def make_rules(plan: str, multi_pod: bool) -> dict:
+    base = RULES_SERIAL if plan == "client_serial" else RULES_PARALLEL
+    return with_pod(base, multi_pod, plan)
+
+
+# ---------------------------------------------------------------------------
+# Conversions
+# ---------------------------------------------------------------------------
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...], rules: dict) -> P:
+    parts = []
+    used: set = set()
+    for a in axes:
+        m = rules.get(a) if a else None
+        if m is None:
+            parts.append(None)
+            continue
+        m = (m,) if isinstance(m, str) else tuple(m)
+        m = tuple(x for x in m if x not in used)
+        used.update(m)
+        parts.append(m if len(m) != 1 else m[0])
+        if not m:
+            parts[-1] = None
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_pspecs(axes_tree, rules: dict):
+    return jax.tree.map(
+        lambda a: logical_to_pspec(a, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(y is None or isinstance(y, str) for y in x),
+    )
+
+
+def tree_shardings(axes_tree, rules: dict, mesh: Mesh):
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, p),
+        tree_pspecs(axes_tree, rules),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def divisibility_ok(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> bool:
+    """Check a shape divides evenly under a spec for this mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, part in zip(shape, tuple(spec)):
+        if part is None:
+            continue
+        parts = (part,) if isinstance(part, str) else part
+        n = int(np.prod([sizes[p] for p in parts]))
+        if dim % n:
+            return False
+    return True
+
+
+def sanitize_pspec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop partitions that do not divide the dimension evenly (e.g. kv=8
+    over model=16) so GSPMD never sees an invalid sharding."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, part in zip(shape, spec_t):
+        if part is None:
+            out.append(None)
+            continue
+        parts = (part,) if isinstance(part, str) else tuple(part)
+        n = int(np.prod([sizes[p] for p in parts]))
+        out.append(part if dim % n == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)

@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD: the sequence is split into chunks of length Q; within a chunk
+the output is the quadratic "attention-like" masked form, across chunks a
+linear recurrence carries the [heads, head_dim, state] SSM state.  This is
+the TPU-friendly formulation — all heavy ops are MXU einsums; the chunk
+recurrence is a ``lax.scan`` over (seq/Q) steps.
+
+Decode: O(1) per token via the recurrent form
+    S_t = exp(dt*A) * S_{t-1} + dt * B_t ⊗ x_t ;  y_t = C_t · S_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import fan_in_init, rmsnorm
+from repro.models.sharding import pm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def ssd_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or max(1, d_in // cfg.ssm_head_dim)
+    return d_in, heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssd(key, cfg):
+    d = cfg.d_model
+    d_in, h, p, n = ssd_dims(cfg)
+    dt = _dtype(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # fused input projection: [z (gate), x, B, C, dt]
+    d_proj = 2 * d_in + 2 * n + h
+    params = {
+        "in_proj": pm(fan_in_init(k1, (d, d_proj), dt), "embed", "mlp"),
+        "conv_w": pm(fan_in_init(k2, (cfg.conv_width, d_in + 2 * n), dt), None, "mlp"),
+        "conv_b": pm(jnp.zeros((d_in + 2 * n,), dt), "mlp"),
+        "A_log": pm(jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)), None),
+        "D": pm(jnp.ones((h,), jnp.float32), None),
+        "dt_bias": pm(jnp.zeros((h,), jnp.float32), None),
+        "norm_scale": pm(jnp.ones((d_in,), dt), "mlp"),
+        "out_proj": pm(fan_in_init(k4, (d_in, d), dt), "mlp", "embed"),
+    }
+    return params
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: [b, l, c]; w: [k, c].
+
+    With ``state`` ([b, k-1, c]) performs a streaming step and returns the new
+    state as well.
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), new_state
+
+
+def _segsum(a):
+    """Stable segment-sum: out[..., i, j] = sum_{j < m <= i} a[..., m].
+
+    a: [..., q]; returns [..., q, q] with -inf above the diagonal.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)[:, None]
+    j = jnp.arange(q)[None, :]
+    return jnp.where(j <= i, diff, -jnp.inf)
+
+
+def _project(params, x, cfg):
+    """Fused input projection -> (z gate [b,l,d_in], xBC [b,l,d_in+2n], dt [b,l,h])."""
+    d_in, h, p, n = ssd_dims(cfg)
+    proj = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : 2 * d_in + 2 * n]
+    dtp = proj[..., 2 * d_in + 2 * n :]
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + params["dt_bias"])  # [b,l,h]
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: [b, l, h, p]; dt: [b, l, h]; A: [h] (positive, used as -A);
+    B, C: [b, l, n].  Returns (y [b,l,h,p], final_state [b,h,p,n]).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    dA = (-A) * dt  # [b,l,h]
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    dAr = dA.reshape(b, nc, q, h)
+    Br = B.reshape(b, nc, q, n)
+    Cr = C.reshape(b, nc, q, n)
+
+    # intra-chunk (quadratic) term
+    L = jnp.exp(_segsum(dAr.transpose(0, 1, 3, 2)))  # [b,nc,h,q,q]
+    CB = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # [b,nc,q,q]
+    M = CB[:, :, None] * L  # [b,nc,h,q,q]
+    y_diag = jnp.einsum("bchij,bcjh,bcjhp->bcihp", M, dtr, xr)
+
+    # per-chunk final states
+    dA_cum = jnp.cumsum(dAr, axis=2)  # [b,nc,q,h]
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b,nc,q,h]
+    states = jnp.einsum("bcjn,bcjh,bcjh,bcjhp->bchpn", Br, decay_states, dtr, xr)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(dAr, axis=2))  # [b,nc,h]
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s, inp):
+        dec, st = inp
+        s_new = s * dec[:, :, None, None] + st
+        return s_new, s
+
+    (final_state, prev_states) = jax.lax.scan(
+        step,
+        s0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,nc,h,p,n]
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(dA_cum)  # decay from chunk start to position i
+    y_off = jnp.einsum("bcin,bchpn,bcih->bcihp", Cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def ssd_block(params, x, cfg, state=None):
+    """Full Mamba-2 mixer.  x: [b, l, d] -> ([b, l, d], cache).
+
+    cache = {"ssm": [b,h,p,n] f32, "conv": [b, k-1, d_in+2n]}
+    """
+    d_in, h, p, n = ssd_dims(cfg)
+    z, xbc, dt = _project(params, x, cfg)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xs = xbc[..., :d_in].reshape(x.shape[0], x.shape[1], h, p).astype(jnp.float32)
+    B = xbc[..., d_in : d_in + n].astype(jnp.float32)
+    C = xbc[..., d_in + n :].astype(jnp.float32)
+    A = jnp.exp(params["A_log"])  # [h] positive
+    init_state = state["ssm"] if state is not None else None
+    y, final = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk, init_state)
+    y = y + params["D"][None, None, :, None] * xs
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    cache = {"ssm": final, "conv": new_conv}
+    return out, cache
+
+
+def ssd_decode_step(params, x, cache, cfg):
+    """One-token recurrent step.  x: [b, 1, d]."""
+    d_in, h, p, n = ssd_dims(cfg)
+    z, xbc, dt = _project(params, x, cfg)
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"], cache["conv"])
+    xs = xbc[..., :d_in].reshape(x.shape[0], 1, h, p).astype(jnp.float32)[:, 0]
+    B = xbc[..., d_in : d_in + n].astype(jnp.float32)[:, 0]  # [b,n]
+    C = xbc[..., d_in + n :].astype(jnp.float32)[:, 0]
+    A = jnp.exp(params["A_log"])
+    dt0 = dt[:, 0]  # [b,h]
+    dA = jnp.exp(-A * dt0)  # [b,h]
+    s = cache["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt0, xs, B
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C, s) + params["D"][None, :, None] * xs
+    y = y.reshape(x.shape[0], 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm({"scale": params["norm_scale"]}, y, cfg.norm_eps)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    return out, {"ssm": s, "conv": new_conv}
+
+
+def init_ssd_cache(cfg, batch):
+    d_in, h, p, n = ssd_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * n), jnp.bfloat16),
+    }

@@ -1,0 +1,399 @@
+"""Decoder-only transformer stack assembling the block zoo.
+
+Layers are stacked per *segment* (see ``ModelConfig.segments``): each segment
+is a super-block (e.g. ("rec","rec","attn") for RecurrentGemma) repeated N
+times; parameters are stacked along a leading "layers" axis and executed with
+``jax.lax.scan`` (+ optional remat) so the lowered HLO stays small even for
+88-layer models.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.shardctx import constrain
+from repro.models.sharding import add_axis, pm, split_meta
+
+VOCAB_PAD_TO = 256
+
+# MoE dispatch implementation: "einsum" (GShard one-hot, baseline) or
+# "scatter" (index-based, EXPERIMENTS.md §Perf C1).  A single-element list so
+# step builders can flip it at trace time without threading a kwarg through
+# every block signature.
+MOE_IMPL = ["einsum"]
+
+
+def padded_vocab(cfg) -> int:
+    return -(-cfg.vocab_size // VOCAB_PAD_TO) * VOCAB_PAD_TO
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg, kind: str):
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "attn":
+        return {
+            "ln1": L.init_rmsnorm(k1, d, cfg),
+            "attn": attn_lib.init_attention(k2, cfg),
+            "ln2": L.init_rmsnorm(k3, d, cfg),
+            "mlp": L.init_mlp(k4, cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": L.init_rmsnorm(k1, d, cfg),
+            "attn": attn_lib.init_attention(k2, cfg),
+            "ln2": L.init_rmsnorm(k3, d, cfg),
+            "moe": moe_lib.init_moe(k4, cfg),
+        }
+    if kind == "rec":
+        return {
+            "ln1": L.init_rmsnorm(k1, d, cfg),
+            "rec": rglru_lib.init_rglru(k2, cfg),
+            "ln2": L.init_rmsnorm(k3, d, cfg),
+            "mlp": L.init_mlp(k4, cfg),
+        }
+    if kind == "ssd":
+        return {
+            "ln": L.init_rmsnorm(k1, d, cfg),
+            "ssd": ssm_lib.init_ssd(k2, cfg),
+        }
+    raise ValueError(kind)
+
+
+def _attn_window(cfg, kind: str, window_override):
+    if window_override is not None:
+        return window_override
+    return cfg.sliding_window
+
+
+def apply_block(
+    params,
+    kind: str,
+    x,
+    positions,
+    cfg,
+    *,
+    mode: str,
+    cache=None,
+    index=None,
+    window_override=None,
+    impl: str = "ref",
+):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    if kind in ("attn", "moe"):
+        h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        w = _attn_window(cfg, kind, window_override)
+        if mode == "decode":
+            a, new_cache = attn_lib.decode_attention(
+                params["attn"], h, cache, index, positions, cfg, window=w
+            )
+        else:
+            a = attn_lib.attention(params["attn"], h, positions, cfg, window=w, impl=impl)
+        x = x + a
+        x = constrain(x, "act_batch", "act_seq", None)
+        h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        if kind == "moe":
+            m, aux = moe_lib.moe_mlp(params["moe"], h, cfg, impl=MOE_IMPL[0])
+        else:
+            m = L.mlp(params["mlp"], h, cfg.act)
+        x = x + m
+    elif kind == "rec":
+        h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+        if mode == "decode":
+            r, new_cache = rglru_lib.rglru_decode_step(params["rec"], h, cache, cfg)
+        else:
+            r, new_cache = rglru_lib.rglru_block(params["rec"], h, cfg, state=None, impl=impl)
+        x = x + r
+        h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(params["mlp"], h, cfg.act)
+    elif kind == "ssd":
+        h = L.rmsnorm(params["ln"], x, cfg.norm_eps)
+        if mode == "decode":
+            s, new_cache = ssm_lib.ssd_decode_step(params["ssd"], h, cache, cfg)
+        else:
+            s, new_cache = ssm_lib.ssd_block(params["ssd"], h, cfg)
+        x = x + s
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "act_batch", "act_seq", None)
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int, window_override=None):
+    if kind in ("attn", "moe"):
+        w = _attn_window(cfg, kind, window_override)
+        clen = min(cache_len, w) if w else cache_len
+        return attn_lib.init_cache(cfg, batch, clen)
+    if kind == "rec":
+        return rglru_lib.init_rglru_cache(cfg, batch)
+    if kind == "ssd":
+        return ssm_lib.init_ssd_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Segmented stack
+# ---------------------------------------------------------------------------
+
+
+def init_stack(key, cfg):
+    """Returns a list of per-segment stacked param trees (with ParamMeta)."""
+    segs = cfg.segments()
+    out = []
+    for si, (kinds, reps) in enumerate(segs):
+        kseg = jax.random.fold_in(key, si)
+
+        def one(k, kinds=kinds):
+            ks = jax.random.split(k, len(kinds))
+            return {f"b{i}": init_block(ks[i], cfg, kind) for i, kind in enumerate(kinds)}
+
+        stacked = jax.vmap(one)(jax.random.split(kseg, reps))
+        out.append(add_axis(stacked, "layers"))
+    return out
+
+
+def stack_cache(cfg, batch: int, cache_len: int, window_override=None):
+    """Caches mirroring the segment structure (stacked over repeats)."""
+    segs = cfg.segments()
+    out = []
+    for kinds, reps in segs:
+        one = {
+            f"b{i}": init_block_cache(cfg, kind, batch, cache_len, window_override)
+            for i, kind in enumerate(kinds)
+        }
+        out.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (reps,) + x.shape).copy(), one))
+    return out
+
+
+def apply_stack(
+    stack_params,
+    cfg,
+    x,
+    positions,
+    *,
+    mode: str,
+    caches=None,
+    index=None,
+    window_override=None,
+    remat: str = "full",
+    impl: str = "ref",
+    remat_group: int = 1,
+):
+    """Run all segments.  Returns (x, new_caches, aux_total).
+
+    ``remat_group`` > 1 (train only): checkpoint every g scan iterations
+    instead of every one — an outer scan over reps//g rematerialised groups
+    with an inner unrolled-by-scan group.  Saved residual carries shrink by
+    g× at no extra recompute beyond full remat (EXPERIMENTS.md §Perf A4).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (kinds, reps) in enumerate(cfg.segments()):
+        p = stack_params[si]
+        c = caches[si] if caches is not None else None
+        g = remat_group if (mode == "train" and remat_group > 1
+                            and reps % remat_group == 0) else 1
+
+        def body(carry, xs, kinds=kinds):
+            h, aux = carry
+            if mode == "decode":
+                pl, cl = xs
+            else:
+                pl, cl = xs, None
+            new_cl = {}
+            for i, kind in enumerate(kinds):
+                blk_cache = cl[f"b{i}"] if cl is not None else None
+                h, nc, a = apply_block(
+                    pl[f"b{i}"],
+                    kind,
+                    h,
+                    positions,
+                    cfg,
+                    mode=mode,
+                    cache=blk_cache,
+                    index=index,
+                    window_override=window_override,
+                    impl=impl,
+                )
+                new_cl[f"b{i}"] = nc
+                aux = aux + a
+            return (h, aux), (new_cl if mode == "decode" else None)
+
+        if g > 1:
+            # group g scan iterations under one checkpoint
+            inner = body
+
+            def body(carry, xs_g, inner=inner):
+                return jax.lax.scan(inner, carry, xs_g)
+
+            p = jax.tree.map(
+                lambda t: t.reshape((reps // g, g) + t.shape[1:]), p
+            )
+
+        if mode == "train" and remat != "none":
+            policy = None
+            if remat == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            body = jax.checkpoint(body, policy=policy, prevent_cse=True)
+
+        xs = (p, c) if mode == "decode" else p
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        new_caches.append(ys)
+    return x, (new_caches if mode == "decode" else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Full decoder-only model
+# ---------------------------------------------------------------------------
+
+
+def init_lm_meta(key, cfg):
+    """Full LM parameter tree as ParamMeta (value + logical axes)."""
+    ke, ks, kh, kn = jax.random.split(key, 4)
+    pv = padded_vocab(cfg)
+    meta: Dict[str, Any] = {
+        "embed": {
+            "table": pm(L.normal_init(ke, (pv, cfg.d_model), jnp.dtype(cfg.dtype), 0.02),
+                        "vocab", "embed")
+        },
+        "final_ln": L.init_rmsnorm(kn, cfg.d_model, cfg),
+        "stack": init_stack(ks, cfg),
+    }
+    if not cfg.tie_embeddings:
+        meta["head"] = {
+            "w": pm(
+                L.normal_init(kh, (cfg.d_model, pv), jnp.dtype(cfg.dtype), 0.02),
+                "embed", "vocab",
+            )
+        }
+    return meta
+
+
+def init_lm(key, cfg):
+    """Returns (params values, logical axes) for the decoder-only LM."""
+    return split_meta(init_lm_meta(key, cfg))
+
+
+def lm_logits(params, cfg, x):
+    x = L.rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    if "head" in params:
+        logits = jnp.einsum(
+            "bsd,dv->bsv", x.astype(jnp.float32), params["head"]["w"].astype(jnp.float32)
+        )
+    else:
+        logits = L.unembed(params["embed"], x)
+    # mask padded vocab entries out of the softmax
+    pv, v = logits.shape[-1], cfg.vocab_size
+    if pv != v:
+        neg = jnp.full((pv - v,), -1e30, logits.dtype)
+        logits = jnp.concatenate(
+            [logits[..., :v], jnp.broadcast_to(neg, logits.shape[:-1] + (pv - v,))], axis=-1
+        )
+    return constrain(logits, "act_batch", None, "vocab")
+
+
+def lm_forward(
+    params,
+    cfg,
+    tokens,
+    positions=None,
+    *,
+    extra_embeds=None,
+    mode: str = "train",
+    remat: str = "full",
+    window_override=None,
+    impl: str = "ref",
+    last_only: bool = False,
+    remat_group: int = 1,
+):
+    """Train/prefill forward.  tokens: [B,S] int32.
+
+    extra_embeds: optional [B,S_front,d] frontend embeddings (VLM patches /
+    audio frames) prepended to the token embeddings.
+    ``last_only``: emit logits for the final position only (serving prefill —
+    avoids materialising the [B,S,V] logits tensor).
+    Returns (logits [B,S(+S_front),V] or [B,1,V], aux_loss).
+    """
+    x = L.embed(params["embed"], tokens)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    if positions is None:
+        s = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), x.shape[:1] + (s,))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+    x = constrain(x, "act_batch", "act_seq", None)
+    x, _, aux = apply_stack(
+        params["stack"], cfg, x, positions,
+        mode=mode, remat=remat, window_override=window_override, impl=impl,
+        remat_group=remat_group,
+    )
+    if last_only:
+        x = x[:, -1:]
+    return lm_logits(params, cfg, x), aux
+
+
+def lm_decode_step(
+    params, cfg, token, caches, index, positions=None, *, window_override=None
+):
+    """One-token decode.  token: [B,1] int32; index: [] int32.
+
+    Returns (logits [B,1,V], new_caches).
+    """
+    x = L.embed(params["embed"], token)
+    if positions is None:
+        positions = jnp.broadcast_to(index.astype(jnp.int32), token.shape)
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+    x, new_caches, _ = apply_stack(
+        params["stack"], cfg, x, positions,
+        mode="decode", caches=caches, index=index, window_override=window_override,
+    )
+    return lm_logits(params, cfg, x), new_caches
+
+
+def lm_loss(params, cfg, tokens, labels, *, remat="full", impl="ref", extra_embeds=None,
+            remat_group=1):
+    """Next-token cross-entropy + MoE aux.  labels: [B,S] with -100 = ignore."""
+    logits, aux = lm_forward(
+        params, cfg, tokens, mode="train", remat=remat, impl=impl,
+        extra_embeds=extra_embeds, remat_group=remat_group,
+    )
+    if extra_embeds is not None:
+        logits = logits[:, extra_embeds.shape[1]:]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = (lse - gold) * mask
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux
+
+
+def lm_axes(cfg):
+    """Logical axes tree matching init_lm output (without materialising).
+
+    Works because ParamMeta axes are static pytree aux-data: eval_shape only
+    abstracts the values.
+    """
+    meta = jax.eval_shape(lambda k: init_lm_meta(k, cfg), jax.random.key(0))
+    return split_meta(meta)[1]
+
+
+def lm_param_shapes(cfg):
+    """ShapeDtypeStruct tree of the LM parameters (no allocation)."""
+    meta = jax.eval_shape(lambda k: init_lm_meta(k, cfg), jax.random.key(0))
+    return split_meta(meta)[0]

@@ -1,0 +1,110 @@
+"""Hand-rolled optimizers (no optax in this environment).
+
+Each optimizer is a pair of pure functions bundled in :class:`Optimizer`:
+    init(params) -> state
+    update(grads, state, params) -> (new_params, new_state)
+Used both for client-local SGD and for server-side FedOpt variants
+(FedAvg ≡ server SGD(1.0) on the aggregated pseudo-gradient, FedAvgM,
+FedAdam — Reddi et al., "Adaptive Federated Optimization").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+    name: str
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = _tmap(lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            new_p = _tmap(lambda p, g: (p - lr * g.astype(jnp.float32)).astype(p.dtype),
+                          params, grads)
+            return new_p, ()
+        new_m = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            step = _tmap(lambda m, g: momentum * m + g.astype(jnp.float32), new_m, grads)
+        else:
+            step = new_m
+        new_p = _tmap(lambda p, s: (p - lr * s).astype(p.dtype), params, step)
+        return new_p, new_m
+
+    return Optimizer(init, update, f"sgd(lr={lr},m={momentum})")
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return AdamState(z, _tmap(jnp.zeros_like, z), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        gf = _tmap(lambda g: g.astype(jnp.float32), grads)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, gf)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def step(p, m, v):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (p - lr * upd).astype(p.dtype)
+
+        return _tmap(step, params, mu, nu), AdamState(mu, nu, c)
+
+    return Optimizer(init, update, f"adam(lr={lr})")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay)._replace(name=f"adamw(lr={lr})")
+
+
+# ---------------------------------------------------------------------------
+# Server-side (FedOpt family) — operate on the aggregated update Δ as a
+# pseudo-gradient: w <- w + server_opt(Δ).
+# ---------------------------------------------------------------------------
+
+
+def make_server_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "sgd":  # FedAvg when lr == 1.0
+        base = sgd(lr)
+    elif name == "fedavgm":
+        base = sgd(lr, momentum=0.9)
+    elif name == "fedadam":
+        base = adam(lr, b1=0.9, b2=0.99, eps=1e-3)
+    else:
+        raise ValueError(name)
+
+    # server consumes a pseudo-gradient = -Δ (so that w <- w + lr·Δ for sgd)
+    def update(agg_delta, state, params):
+        neg = jax.tree.map(lambda d: -d, agg_delta)
+        return base.update(neg, state, params)
+
+    return Optimizer(base.init, update, f"server_{base.name}")

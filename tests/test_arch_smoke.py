@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+of the same family (<=2 layers, d_model<=512, <=4 experts), run one forward
+pass and one train step on CPU, assert output shapes and absence of NaNs.
+Also: one decode step against a cache (the serve path), and prefill/decode
+consistency for a short prompt.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_arch
+from repro.models.model import build
+from repro.models.transformer import padded_vocab
+from repro.optim.optimizers import sgd
+
+
+def _batch(cfg, key, b=2, s=32):
+    i32 = jnp.int32
+    out = {}
+    if cfg.enc_layers > 0:
+        out["frontend"] = jax.random.normal(key, (b, cfg.enc_seq, cfg.d_model))
+        out["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size, i32)
+        out["labels"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size, i32)
+        return out
+    n_text = s
+    if cfg.frontend != "none" and cfg.frontend_tokens:
+        out["frontend"] = jax.random.normal(key, (b, cfg.frontend_tokens, cfg.d_model))
+    out["tokens"] = jax.random.randint(key, (b, n_text), 0, cfg.vocab_size, i32)
+    out["labels"] = jax.random.randint(key, (b, n_text), 0, cfg.vocab_size, i32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_arch(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    model = build(cfg)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+
+    # forward
+    logits = model.forward(params, batch)
+    b, s = batch["tokens"].shape
+    exp_s = s + (cfg.frontend_tokens if (cfg.frontend == "vision") else 0)
+    assert logits.shape == (b, exp_s, padded_vocab(cfg))
+    assert not bool(jnp.isnan(logits).any()), "NaN in forward logits"
+
+    # one SGD train step
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss)), float(loss)
+    opt = sgd(1e-2)
+    new_params, _ = opt.update(grads, opt.init(params), params)
+    loss2 = model.loss(new_params, batch)
+    assert np.isfinite(float(loss2))
+    # gradients must touch the stack (not just the embedding)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+    )
+    assert float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch, rng):
+    cfg = get_arch(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(rng)
+    b, cache_len = 2, 64
+    caches = model.init_cache(b, cache_len, params=params)
+    token = jnp.ones((b, 1), jnp.int32)
+    logits, new_caches = model.decode_step(params, token, caches, jnp.asarray(0))
+    assert logits.shape == (b, 1, padded_vocab(cfg))
+    assert not bool(jnp.isnan(logits).any())
+    # cache must actually change
+    changed = jax.tree.reduce(
+        lambda a, x: a or x,
+        jax.tree.map(
+            lambda a, b_: bool(jnp.any(a != b_)) if a.dtype != jnp.int32 else False,
+            caches, new_caches,
+        ),
+        False,
+    )
+    assert changed, "decode step did not write to the cache"
+
+
+@pytest.mark.parametrize("arch", ["granite_3_8b", "mamba2_130m", "recurrentgemma_9b",
+                                  "phi3p5_moe_42b"])
+def test_prefill_decode_consistency(arch, rng):
+    """Greedy decode over a short prompt must match teacher-forced logits.
+
+    MoE note: capacity-based routing drops tokens that overflow an expert's
+    queue, and the competition set differs between teacher-forced prefill
+    (whole sequence) and stepwise decode (one token) — so exact consistency
+    only holds when capacity is large enough that nothing drops.  We raise
+    capacity_factor for this test; the semantic difference at tight capacity
+    is inherent to GShard-style MoE, not a bug.
+    """
+    import dataclasses
+
+    cfg = get_arch(arch, smoke=True)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+    model = build(cfg)
+    params = model.init(rng)
+    b, s = 1, 8
+    toks = jax.random.randint(rng, (b, s), 0, cfg.vocab_size, jnp.int32)
+    full = model.forward(params, {"tokens": toks})
+
+    caches = model.init_cache(b, 32, params=params)
+    outs = []
+    for t in range(s):
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches,
+                                       jnp.asarray(t))
+        outs.append(lg)
+    stepwise = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(full, np.float32), np.asarray(stepwise, np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+def test_full_configs_report_sane_param_counts():
+    expected = {
+        "phi3p5_moe_42b": (35e9, 50e9),
+        "llama4_maverick_400b": (330e9, 480e9),
+        "recurrentgemma_9b": (7e9, 12e9),
+        "mamba2_130m": (0.1e9, 0.2e9),
+        "mistral_large_123b": (110e9, 135e9),
+        "qwen2_vl_72b": (60e9, 85e9),
+        "qwen2p5_32b": (28e9, 40e9),
+        "granite_3_8b": (6.5e9, 10e9),
+        "phi3_mini_3p8b": (3.2e9, 4.6e9),
+        "seamless_m4t_large_v2": (1.2e9, 3.2e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_moe_active_params_below_total():
+    cfg = get_arch("phi3p5_moe_42b")
+    assert cfg.active_param_count() < 0.3 * cfg.param_count()

@@ -1,0 +1,57 @@
+"""Dry-run artifact coverage: every assigned (arch × shape × mesh) baseline
+must exist, parse, and carry the fields the roofline analysis needs.
+
+(The artifacts are produced by `python -m repro.launch.dryrun --all --mesh
+both`; this test guards against silently losing coverage.  It SKIPS — not
+fails — when the sweep has never been run, e.g. on a fresh checkout.)
+"""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES
+
+ART = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "artifacts")
+
+
+def _have_any():
+    return bool(glob.glob(os.path.join(ART, "*__single.json")))
+
+
+@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_all_40_pairs_have_baseline_artifacts(mesh):
+    missing = []
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            p = os.path.join(ART, f"{arch}__{shape}__{mesh}.json")
+            if not os.path.exists(p):
+                missing.append((arch, shape))
+    assert not missing, f"missing {mesh} baselines: {missing}"
+
+
+@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+def test_artifacts_carry_roofline_fields():
+    for p in glob.glob(os.path.join(ART, "*__single.json")):
+        with open(p) as f:
+            a = json.load(f)
+        if "arch" not in a:  # fl_results.json etc.
+            continue
+        assert a["cost"]["flops"] >= 0, p
+        assert a["cost"]["bytes_accessed"] >= 0, p
+        assert "total" in a["collectives"], p
+        assert a["devices"] in (256, 512), p
+        assert a["memory"]["temp_bytes"] is not None, p
+
+
+@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+def test_hillclimb_winner_artifacts_exist():
+    """The §Perf optimized variants referenced by EXPERIMENTS.md."""
+    for tag_file in (
+        "mamba2_130m__decode_32k__single__ssmstate.json",
+        "llama4_maverick_400b__train_4k__single__scatter.json",
+        "mistral_large_123b__train_4k__single__seqpar.json",
+    ):
+        assert os.path.exists(os.path.join(ART, tag_file)), tag_file

@@ -1,0 +1,273 @@
+"""Property-based tests (hypothesis) on the FL core's invariants
+(deliverable c): DP mechanics, selection, fault math, aggregation, SSD
+algebra."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import FLConfig
+from repro.core import dp as dp_lib
+from repro.core import fault as fault_lib
+from repro.core import selection as sel_lib
+from repro.core.aggregation import (aggregate_stacked, stream_accumulate,
+                                    stream_finalize, stream_init)
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# DP
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(0.1, 100.0), st.floats(1e-7, 1e-3))
+@settings(**SET)
+def test_gaussian_sigma_monotone_in_epsilon(eps, delta):
+    """Less privacy budget -> more noise."""
+    s1 = dp_lib.gaussian_sigma(eps, delta)
+    s2 = dp_lib.gaussian_sigma(eps * 2, delta)
+    assert s2 < s1
+
+
+@given(st.floats(0.01, 50.0), st.integers(1, 64))
+@settings(**SET)
+def test_clip_bounds_global_norm(clip, n):
+    x = {"a": jnp.linspace(-3, 7, n), "b": jnp.ones((n, 2)) * 2.5}
+    clipped, norm = dp_lib.clip_by_global_norm(x, clip)
+    out_norm = float(dp_lib.global_norm(clipped))
+    assert out_norm <= clip * (1 + 1e-4)
+    # no-op when already within the ball
+    if float(norm) <= clip:
+        for a, b in zip(jax.tree.leaves(clipped), jax.tree.leaves(x)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@given(st.floats(0.3, 5.0), st.integers(1, 300))
+@settings(**SET)
+def test_rdp_accountant_monotone_in_rounds(z, rounds):
+    acc = dp_lib.RdpAccountant(1e-5)
+    acc.step(z)
+    e1 = acc.epsilon()
+    for _ in range(rounds):
+        acc.step(z)
+    assert acc.epsilon() >= e1  # composition only loses privacy
+
+
+@given(st.floats(0.05, 0.9))
+@settings(**SET)
+def test_subsampling_amplifies_privacy(q):
+    full = dp_lib.rdp_gaussian(1.0)
+    sub = dp_lib.rdp_subsampled_gaussian(1.0, q)
+    assert (sub <= full + 1e-12).all()
+
+
+def test_noise_multiplier_meets_budget():
+    for eps in (2.0, 8.0, 32.0):
+        z = dp_lib.noise_multiplier_for_budget(eps, 1e-5, 100, q=0.25)
+        acc = dp_lib.RdpAccountant(1e-5)
+        for _ in range(100):
+            acc.step(z, 0.25)
+        assert acc.epsilon() <= eps * 1.02
+
+
+def test_privatize_noise_statistics():
+    """Added noise must match the configured sigma distributionally."""
+    key = jax.random.key(0)
+    x = {"w": jnp.zeros((20_000,))}
+    sigma = 0.37
+    noised, _ = dp_lib.privatize_update(x, key, mode="clipped", clip=1.0,
+                                        sigma=sigma)
+    sd = float(jnp.std(noised["w"]))
+    assert abs(sd - sigma) / sigma < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Fault model
+# ---------------------------------------------------------------------------
+
+
+@given(st.floats(1.0, 5000.0), st.floats(0.5, 4.0))
+@settings(**SET)
+def test_weibull_prob_in_unit_interval_and_monotone(lam, k):
+    ts = np.linspace(0.1, 10 * lam, 50)
+    p = fault_lib.weibull_failure_prob(ts, lam, k)
+    assert ((p >= 0) & (p <= 1)).all()
+    assert (np.diff(p) >= -1e-12).all()
+
+
+@given(st.floats(100.0, 5000.0), st.floats(0.6, 3.0), st.floats(0.5, 20.0))
+@settings(**SET)
+def test_optimal_interval_is_a_minimum(lam, k, w):
+    """t_c* must be the minimum within the search bracket (the bracket caps
+    at max(T, 4λ): an optimum pinned at the cap means 'checkpoint at most
+    once per run', which is semantically correct when MTBF >> T)."""
+    T, t_r = 3600.0, 30.0
+    hi = max(T, 4.0 * lam)
+    tc = fault_lib.optimal_checkpoint_interval(T, t_r, lam, k, write_cost=w)
+    assert 0 < tc <= hi * (1 + 1e-6)
+    c_star = fault_lib.checkpoint_cost(tc, T, t_r, lam, k, w)
+    for factor in (0.5, 2.0):
+        other = tc * factor
+        if not (1e-3 <= other <= hi):
+            continue  # outside the bracket: boundary optimum is allowed
+        c_other = fault_lib.checkpoint_cost(other, T, t_r, lam, k, w)
+        assert c_star <= c_other * (1 + 1e-6)
+
+
+@given(st.lists(st.floats(1.0, 1000.0), min_size=30, max_size=200))
+@settings(**SET)
+def test_weibull_fit_positive(samples):
+    lam, k = fault_lib.fit_weibull(samples)
+    assert lam > 0 and k > 0
+
+
+def test_weibull_fit_recovers_parameters():
+    rng = np.random.default_rng(3)
+    for true_k in (0.8, 1.5, 2.5):
+        x = 200.0 * rng.weibull(true_k, 4000)
+        lam, k = fault_lib.fit_weibull(x)
+        assert abs(k - true_k) / true_k < 0.1
+        assert abs(lam - 200.0) / 200.0 < 0.1
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(4, 64), st.integers(1, 10), st.sampled_from(
+    list(sel_lib.strategy_names())))
+@settings(**SET)
+def test_selection_respects_k_and_availability(n, k, strat_name):
+    k = min(k, n)
+    fl = FLConfig(n_clients=n, clients_per_round=k)
+    state = sel_lib.init_utility_state(n, key=jax.random.key(0))
+    util = sel_lib.compute_utility(state, fl)
+    avail = (jnp.arange(n) % 2 == 0).astype(jnp.float32)  # half available
+    strat = sel_lib.get_strategy(strat_name)
+    mask = strat(jax.random.key(1), state, util, avail,
+                 jnp.asarray(float(k)), k)
+    m = np.asarray(mask)
+    assert ((m == 0) | (m == 1)).all()
+    assert m.sum() <= k
+    assert (m * (1 - np.asarray(avail)) == 0).all(), "selected unavailable client"
+
+
+@given(st.integers(4, 40))
+@settings(**SET)
+def test_adaptive_k_grows_on_plateau_shrinks_on_improvement(n):
+    fl = FLConfig(n_clients=n, clients_per_round=max(2, n // 4), k_min=2)
+    ks = sel_lib.init_k_state(fl)
+    k0 = float(ks.k)
+    # strong improvement -> K shrinks (or stays at k_min)
+    ks2 = sel_lib.update_k(ks, jnp.asarray(0.5), fl)
+    ks2 = sel_lib.update_k(ks2._replace(best_metric=jnp.asarray(0.5)),
+                           jnp.asarray(0.25), fl)
+    assert float(ks2.k) <= k0
+    # plateau -> K grows
+    ks3 = ks._replace(best_metric=jnp.asarray(1.0))
+    for _ in range(4):
+        ks3 = sel_lib.update_k(ks3, jnp.asarray(1.0), fl)
+    assert float(ks3.k) > k0 or float(ks3.k) == float(fl.k_max or n)
+
+
+def test_utility_update_only_touches_selected():
+    fl = FLConfig(n_clients=6)
+    s = sel_lib.init_utility_state(6, key=jax.random.key(0))
+    mask = jnp.array([1, 0, 1, 0, 0, 0], jnp.float32)
+    pre = jnp.full((6,), 2.0)
+    post = jnp.full((6,), 1.0)
+    s2 = sel_lib.update_utility_state(s, mask, pre, post, fl)
+    np.testing.assert_allclose(np.asarray(s2.perf_ema)[[1, 3, 4, 5]],
+                               np.asarray(s.perf_ema)[[1, 3, 4, 5]])
+    assert (np.asarray(s2.perf_ema)[[0, 2]] > 0).all()
+    np.testing.assert_allclose(np.asarray(s2.participation),
+                               np.asarray(mask))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(2, 12))
+@settings(**SET)
+def test_stacked_and_streamed_aggregation_agree(n):
+    key = jax.random.key(n)
+    deltas = {"w": jax.random.normal(key, (n, 5, 3)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (n, 4))}
+    mask = (jax.random.uniform(jax.random.fold_in(key, 2), (n,)) > 0.4).astype(
+        jnp.float32)
+    if float(mask.sum()) == 0:
+        mask = mask.at[0].set(1.0)
+    weights = jax.random.uniform(jax.random.fold_in(key, 3), (n,), minval=0.5,
+                                 maxval=2.0)
+    stacked = aggregate_stacked(deltas, mask, weights)
+
+    carry = stream_init(jax.tree.map(lambda x: x[0], deltas))
+    for i in range(n):
+        carry = stream_accumulate(carry, jax.tree.map(lambda x: x[i], deltas),
+                                  mask[i], weights[i])
+    streamed = stream_finalize(carry)
+    for a, b in zip(jax.tree.leaves(stacked), jax.tree.leaves(streamed)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                                   atol=2e-6)
+
+
+def test_aggregation_unselected_clients_have_no_influence():
+    n = 5
+    deltas = {"w": jnp.stack([jnp.full((3,), float(i)) for i in range(n)])}
+    mask = jnp.array([1, 1, 0, 0, 0], jnp.float32)
+    agg = aggregate_stacked(deltas, mask, jnp.ones((n,)))
+    np.testing.assert_allclose(np.asarray(agg["w"]), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# SSD algebra (chunk-size invariance = the state-passing identity)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunks", [(8, 32), (16, 64), (32, 64)])
+def test_ssd_chunk_size_invariance(chunks):
+    from repro.models.ssm import ssd_chunked
+
+    b, l, h, p, n = 2, 64, 3, 8, 16
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, l, h)))
+    A = jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, l, n))
+    y1, s1 = ssd_chunked(x, dt, A, B, C, chunks[0])
+    y2, s2 = ssd_chunked(x, dt, A, B, C, chunks[1])
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_ssd_chunked_matches_sequential_recurrence():
+    """SSD dual form == naive recurrent form."""
+    from repro.models.ssm import ssd_chunked
+
+    b, l, h, p, n = 1, 32, 2, 4, 8
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, l, h)))
+    A = jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, l, n))
+    y, _ = ssd_chunked(x, dt, A, B, C, 16)
+
+    # naive recurrence
+    s = np.zeros((b, h, p, n))
+    ys = np.zeros((b, l, h, p))
+    xn, dtn, An, Bn, Cn = map(np.asarray, (x, dt, A, B, C))
+    for t in range(l):
+        dA = np.exp(-An * dtn[:, t])  # [b,h]
+        s = s * dA[:, :, None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", dtn[:, t], xn[:, t], Bn[:, t])
+        ys[:, t] = np.einsum("bn,bhpn->bhp", Cn[:, t], s)
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,163 @@
+"""Integration tests: full FL rounds end-to-end (both plans), DP modes,
+fault-tolerance semantics, checkpoint round-trips, and convergence on the
+anomaly-detection use case."""
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, get_arch
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import make_federated, round_batches
+from repro.data.tokens import lm_round_batches
+from repro.models import mlp as mlp_lib
+from repro.models.model import build
+
+
+def _fl(**kw):
+    base = FLConfig(n_clients=10, clients_per_round=4, local_epochs=1,
+                    local_batch=16, local_lr=0.08, dp_enabled=False,
+                    failure_prob=0.0)
+    return dataclasses.replace(base, **kw)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_federated(0, "unsw", n_samples=3_000, n_clients=10)
+
+
+def _mlp_setup(fed, fl, seed=0):
+    params = mlp_lib.init_mlp(jax.random.key(seed), fed.n_features, 32, 2)
+    state = rounds_lib.init_round_state(params, fl, jax.random.key(seed + 1),
+                                        n_clients=fed.n_clients)
+    return params, state
+
+
+def _batches(fed, fl, steps=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return jax.tree.map(jnp.asarray, round_batches(rng, fed, steps, fl.local_batch))
+
+
+def test_parallel_round_converges(fed):
+    fl = _fl()
+    params, state = _mlp_setup(fed, fl)
+    step = jax.jit(rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, 10))
+    losses = []
+    for r in range(12):
+        state, m = step(state, _batches(fed, fl, seed=r))
+        losses.append(float(m.global_loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+    acc = float(mlp_lib.accuracy(state.params, jnp.asarray(fed.test_x),
+                                 jnp.asarray(fed.test_y)))
+    assert acc > 0.8
+
+
+def test_serial_round_matches_semantics(fed):
+    """client_serial with K slots must also converge and produce
+    identically-structured state."""
+    fl = _fl(serial_clients_in_step=3)
+    params, state = _mlp_setup(fed, fl)
+    step = jax.jit(rounds_lib.make_serial_round(mlp_lib.mlp_loss, fl, 10))
+    for r in range(10):
+        b = _batches(fed, fl, seed=r)
+        b3 = jax.tree.map(lambda x: x[:3], b)
+        state, m = step(state, b3)
+    assert float(m.global_loss) < 0.7
+    assert state.params["l1"]["w"].shape == params["l1"]["w"].shape
+
+
+def test_dp_noise_shrinks_with_epsilon(fed):
+    """Smaller epsilon -> more noise -> worse (or equal) convergence."""
+    def final_loss(eps):
+        fl = _fl(dp_enabled=True, dp_mode="clipped", dp_epsilon=eps, dp_clip=2.0)
+        _, state = _mlp_setup(fed, fl)
+        step = jax.jit(rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, 10))
+        for r in range(10):
+            state, m = step(state, _batches(fed, fl, seed=r))
+        return float(m.global_loss)
+
+    noisy = final_loss(0.5)
+    clean = final_loss(500.0)
+    assert clean < noisy + 0.05, (clean, noisy)
+
+
+def test_dp_paper_mode_runs(fed):
+    fl = _fl(dp_enabled=True, dp_mode="paper", dp_sigma=0.01)
+    _, state = _mlp_setup(fed, fl)
+    step = jax.jit(rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, 10))
+    state, m = step(state, _batches(fed, fl))
+    assert np.isfinite(float(m.global_loss))
+
+
+def test_fault_tolerance_keeps_failed_clients_contributing(fed):
+    """At high failure rates, FT must retain more contributors than no-FT."""
+    def contributors(ft):
+        fl = _fl(failure_prob=0.9, fault_tolerance=ft, clients_per_round=8,
+                 adaptive_k=False)
+        _, state = _mlp_setup(fed, fl)
+        step = jax.jit(rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, 10,
+                                                      ckpt_every_steps=1))
+        tot = 0.0
+        for r in range(5):
+            state, m = step(state, _batches(fed, fl, steps=4, seed=r))
+            tot += float(m.sel_mask.sum())
+        return tot
+
+    with_ft = contributors(True)
+    without = contributors(False)
+    assert with_ft >= without
+
+
+def test_checkpoint_roundtrip_restores_training(fed, tmp_path):
+    from repro.checkpoint.checkpoint import Checkpointer
+
+    fl = _fl()
+    _, state = _mlp_setup(fed, fl)
+    step = jax.jit(rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, 10))
+    state, _ = step(state, _batches(fed, fl))
+    ck = Checkpointer(str(tmp_path), interval_rounds=1)
+    ck.maybe_save(1, state.params)
+    rnd, restored = ck.restore_latest(state.params)
+    assert rnd == 1
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fl_round_on_assigned_architecture():
+    """The FL engine must run the *assigned architectures*, not just the
+    MLP: one serial round on the reduced mamba2 + one on reduced granite."""
+    for arch in ("mamba2_130m", "granite_3_8b"):
+        cfg = get_arch(arch, smoke=True)
+        model = build(cfg)
+        fl = _fl(n_clients=8, serial_clients_in_step=2, local_lr=0.01)
+        params = model.init(jax.random.key(0))
+        state = rounds_lib.init_round_state(params, fl, jax.random.key(1),
+                                            n_clients=8)
+        loss_fn = lambda p, b: model.loss(p, b, remat="none")
+        step = jax.jit(rounds_lib.make_serial_round(loss_fn, fl, 8))
+        data = lm_round_batches(cfg.vocab_size, 2, 1, 2, 16, seed=0)
+        batches = jax.tree.map(jnp.asarray, data)
+        state, m = step(state, batches)
+        assert np.isfinite(float(m.global_loss)), arch
+        # params must have moved
+        moved = any(
+            bool(jnp.any(a != b))
+            for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(params))
+        )
+        assert moved, arch
+
+
+def test_microbatched_grads_match_full_batch():
+    """grad_accum must be numerically equivalent to the full batch."""
+    fed = make_federated(1, "unsw", n_samples=600, n_clients=4)
+    params = mlp_lib.init_mlp(jax.random.key(0), fed.n_features, 16, 2)
+    batch = {"x": jnp.asarray(fed.test_x[:32]), "y": jnp.asarray(fed.test_y[:32])}
+    l1, g1 = jax.value_and_grad(mlp_lib.mlp_loss)(params, batch)
+    vag = rounds_lib.microbatched_value_and_grad(mlp_lib.mlp_loss, 4)
+    l2, g2 = vag(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
