@@ -2,7 +2,8 @@
 
 Paper: UNSW accuracy 86%→89% as ε goes 10→100 (loss 3→2.5); ROAD 73%→82%
 (loss 10→9).  Claim validated here: accuracy increases monotonically-ish and
-loss decreases as ε grows (less noise), on both datasets.
+loss decreases as ε grows (less noise), on both datasets.  Each ε point runs
+its seeds as one compiled batch (benchmarks/common.py).
 """
 from __future__ import annotations
 

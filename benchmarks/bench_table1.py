@@ -8,6 +8,9 @@ On the synthetic stand-ins we validate the paper's *relative* claims:
   (2) the training-time metric — time-to-target-accuracy — is lowest for
       Proposed (its utility score prefers fast, clean clients; ACFL's
       loss-seeking picks the corrupted ones; FedL2P pays personalisation).
+
+All seeds of each (method, dataset) cell run as one compiled scan/vmap
+program (benchmarks/common.py -> run_fl_batch).
 """
 from __future__ import annotations
 

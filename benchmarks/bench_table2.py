@@ -4,7 +4,8 @@ Paper: enabling checkpoint-based fault tolerance costs a little accuracy
 (94.8→92.1 on UNSW) and time (570→600s) but keeps training alive under
 client failures.  We run ours with/without FT at the paper's 5% failure rate
 and additionally at a 25% stress rate, where the robustness benefit (the
-reason FT exists) becomes visible in final accuracy.
+reason FT exists) becomes visible in final accuracy.  Seeds per cell run
+batched through the scan/vmap engine (benchmarks/common.py).
 """
 from __future__ import annotations
 

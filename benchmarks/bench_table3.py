@@ -6,7 +6,9 @@ expresses in ACCURACY (the corrupted-client exclusion moves the decision
 boundary, not the ranking), so we run the test on both metrics over the
 converged-half round-wise samples of every seed and report both:
 accuracy significance reproduces the paper's conclusion; AUC does not
-separate on the stand-ins (flagged honestly in EXPERIMENTS.md).
+separate on the stand-ins (flagged honestly in EXPERIMENTS.md §Table-III).
+The repeated trials the U test needs are cheap: every cell's seeds run as
+one compiled batch (EXPERIMENTS.md §Engine).
 """
 from __future__ import annotations
 

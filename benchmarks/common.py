@@ -3,6 +3,10 @@
 Runs (method × dataset × seed) FL trainings once and caches RunResults in
 ``benchmarks/artifacts/fl_results.json`` so Tables I/II/III and Fig. 3 reuse
 the same trials (the paper also reports means over 10 repeated trials).
+
+All uncached seeds of a (method, dataset) cell run as ONE compiled program
+via ``run_fl_batch`` (the scan/vmap engine, EXPERIMENTS.md §Engine) — the
+grid is hardware-bound, not dispatch-bound.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import FLConfig
 from repro.data.synthetic import make_federated
-from repro.train.fl_driver import RunResult, run_fl
+from repro.train.fl_driver import RunResult, run_fl_batch
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 CACHE = os.path.join(ARTIFACT_DIR, "fl_results.json")
@@ -50,8 +54,14 @@ def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
     return dataclasses.replace(cfg, **kw) if kw else cfg
 
 
+# Cache-key version: bump when the engine's stochastic process changes so a
+# cell can never silently mix trials from different engines (the scan/vmap
+# engine replaced the legacy loop's host-NumPy batch stream in PR 1).
+ENGINE_REV = "scan1"
+
+
 def _key(method, dataset, seed, tag):
-    return f"{method}|{dataset}|{seed}|{tag}"
+    return f"{method}|{dataset}|{seed}|{tag}|{ENGINE_REV}"
 
 
 def _load() -> Dict[str, dict]:
@@ -79,19 +89,27 @@ def get_fed(dataset: str, seed: int = 0):
     return _FEDS[k]
 
 
+def run_cell(method: str, dataset: str, seeds: Sequence[int],
+             fl: Optional[FLConfig] = None, tag: str = "default",
+             rounds: Optional[int] = None) -> List[dict]:
+    """All seeds of one (method, dataset) cell.  Uncached seeds run together
+    in one ``run_fl_batch`` call — one compile, one device program."""
+    cache = _load()
+    seeds = [int(s) for s in seeds]
+    missing = [s for s in seeds if _key(method, dataset, s, tag) not in cache]
+    if missing:
+        fed = get_fed(dataset, seed=0)  # same federation across seeds; seed varies FL
+        results = run_fl_batch(fed, fl or base_fl(), method, seeds=missing,
+                               rounds=rounds or ROUNDS, dataset=dataset)
+        for res in results:
+            cache[_key(method, dataset, res.seed, tag)] = dataclasses.asdict(res)
+        _save(cache)
+    return [cache[_key(method, dataset, s, tag)] for s in seeds]
+
+
 def run_cached(method: str, dataset: str, seed: int, fl: Optional[FLConfig] = None,
                tag: str = "default", rounds: Optional[int] = None) -> dict:
-    cache = _load()
-    key = _key(method, dataset, seed, tag)
-    if key in cache:
-        return cache[key]
-    fed = get_fed(dataset, seed=0)  # same federation across seeds; seed varies FL
-    res = run_fl(fed, fl or base_fl(), method, seed=seed,
-                 rounds=rounds or ROUNDS, dataset=dataset)
-    d = dataclasses.asdict(res)
-    cache[key] = d
-    _save(cache)
-    return d
+    return run_cell(method, dataset, [seed], fl=fl, tag=tag, rounds=rounds)[0]
 
 
 def run_grid(methods: Sequence[str], datasets: Sequence[str],
@@ -101,8 +119,7 @@ def run_grid(methods: Sequence[str], datasets: Sequence[str],
     out = []
     for ds in datasets:
         for m in methods:
-            for s in seeds:
-                out.append(run_cached(m, ds, s, fl=fl, tag=tag))
+            out.extend(run_cell(m, ds, seeds, fl=fl, tag=tag))
     return out
 
 

@@ -3,7 +3,9 @@
 Trains the anomaly-detection MLP with federated learning for a few hundred
 rounds on the synthetic UNSW-NB15 stand-in, comparing our method against the
 paper's baselines, with server-side checkpointing at the Weibull-optimal
-interval, recovery, and a final Mann-Whitney significance test.
+interval, recovery, and a final Mann-Whitney significance test.  Each
+method's repeated seeds run as one compiled scan/vmap program
+(fl_driver.run_fl_batch; see docs/ARCHITECTURE.md).
 
 Run:  PYTHONPATH=src python examples/anomaly_fl.py [--rounds 200] [--dataset road]
 """
@@ -55,12 +57,10 @@ def main():
 
     results = {}
     for method in ("proposed", "acfl", "fedl2p"):
-        per_seed = []
-        for seed in range(args.seeds):
-            r = fl_driver.run_fl(fed, fl, method, seed=seed, rounds=args.rounds,
-                                 eval_every=max(args.rounds // 10, 5),
-                                 dataset=args.dataset)
-            per_seed.append(r)
+        # all seeds of the method run as ONE compiled scan/vmap program
+        per_seed = fl_driver.run_fl_batch(
+            fed, fl, method, seeds=range(args.seeds), rounds=args.rounds,
+            eval_every=max(args.rounds // 10, 5), dataset=args.dataset)
         accs = [r.accuracy for r in per_seed]
         aucs = [r.auc for r in per_seed]
         ts = [r.sim_time_s for r in per_seed]

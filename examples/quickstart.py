@@ -3,6 +3,9 @@
 1. Build a reduced assigned architecture and run a forward + train step.
 2. Run three FL communication rounds (Algorithm 1: adaptive selection + DP +
    fault tolerance) on the paper's anomaly-detection MLP.
+3. Run a full (short) experiment with the compiled engine: the whole round
+   loop is one ``lax.scan``, vmapped over 2 seeds — one device program for
+   every repeated trial (docs/ARCHITECTURE.md).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -61,6 +64,21 @@ def part2_fl_rounds():
     print(f"  test accuracy after 3 rounds: {float(acc)*100:.1f}%")
 
 
+def part3_compiled_engine():
+    print("== 3. compiled engine: 15 rounds x 2 seeds as ONE program ==")
+    from repro.train import fl_driver
+
+    fed = make_federated(0, "unsw", n_samples=2_000, n_clients=10)
+    fl = FLConfig(n_clients=10, clients_per_round=4, local_epochs=3,
+                  local_batch=32, dp_epsilon=50.0, dp_clip=5.0)
+    results = fl_driver.run_fl_batch(fed, fl, "proposed", seeds=(0, 1),
+                                     rounds=15, eval_every=5)
+    for r in results:
+        print(f"  seed {r.seed}: acc={r.accuracy*100:.1f}% auc={r.auc:.3f} "
+              f"sim_time={r.sim_time_s:.1f}s eps_spent={r.eps_spent:.2f}")
+
+
 if __name__ == "__main__":
     part1_model_zoo()
     part2_fl_rounds()
+    part3_compiled_engine()

@@ -73,8 +73,13 @@ def add_gaussian_noise(tree, sigma: float, key):
 
 
 def privatize_update(tree, key, *, mode: str, clip: float, sigma: float,
-                     use_kernel: bool = False):
+                     use_kernel: Optional[bool] = None):
     """Apply the paper's DP step to one client's update pytree.
+
+    ``use_kernel=None`` auto-routes the clipped mechanism: the fused Pallas
+    clip+noise kernel when a TPU backend is attached, the jnp reference path
+    on CPU (``kernels.ref.dp_clip_noise_tree_ref`` semantics — same noise
+    keys, so the routing is observationally neutral).
 
     Returns (noised_update, pre_clip_norm).
     """
@@ -82,9 +87,11 @@ def privatize_update(tree, key, *, mode: str, clip: float, sigma: float,
         norm = global_norm(tree)
         return add_gaussian_noise(tree, sigma, key), norm
     if mode == "clipped":
-        if use_kernel:
-            from repro.kernels import ops as kops
+        from repro.kernels import ops as kops
 
+        if use_kernel is None:
+            use_kernel = kops.pallas_backend_ready()
+        if use_kernel:
             return kops.dp_clip_noise_tree(tree, key, clip, sigma)
         clipped, norm = clip_by_global_norm(tree, clip)
         return add_gaussian_noise(clipped, sigma, key), norm

@@ -23,7 +23,7 @@ utility scores, exactly as the paper specifies.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,7 +147,8 @@ def _effective_steps(fail_step, local_steps: int, ckpt_every: int, ft_enabled: b
 
 
 def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
-                        ckpt_every_steps: int = 2, dp_use_kernel: bool = False,
+                        ckpt_every_steps: int = 2,
+                        dp_use_kernel: Optional[bool] = None,
                         grad_accum: int = 1, delta_constraint=None):
     """Build ``round_step(state, batches) -> (state, metrics)``.
 
@@ -155,6 +156,10 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
     ``delta_constraint``: optional fn applied to the stacked client deltas —
     steps.py uses it to pin the client axis onto the data mesh axes so GSPMD
     never materialises every client's weights on one shard.
+    ``dp_use_kernel=None`` (default) auto-routes the per-client clip+noise:
+    the fused Pallas kernel (``kernels/dp_clip_noise.py``) when the backend
+    is TPU, the ``kernels/ref.py`` jnp fallback on CPU — ``core/dp.py``'s
+    accountant stays the source of truth for ε either way.
     """
     server = make_server_optimizer(fl.server_opt, fl.server_lr)
     strategy = sel_lib.get_strategy(fl.selection)
@@ -263,7 +268,7 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
 
 
 def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
-                      dp_use_kernel: bool = False, grad_accum: int = 1,
+                      dp_use_kernel: Optional[bool] = None, grad_accum: int = 1,
                       delta_dtype=None):
     """Build ``round_step(state, batches) -> (state, metrics)``.
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 UNSW_N_FEATURES = 42
@@ -223,4 +225,77 @@ def round_batches(rng: np.random.Generator, fed: FederatedData, local_steps: int
         idx = rng.integers(0, len(fed.x[ci]), (local_steps, batch))
         xs[ci] = fed.x[ci][idx]
         ys[ci] = fed.y[ci][idx]
+    return {"x": xs, "y": ys}
+
+
+# ---------------------------------------------------------------------------
+# Device-side federation (for the lax.scan engine in train/fl_driver.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StackedFederation:
+    """Ragged per-client shards padded to [n_clients, max_n, ...] on device.
+
+    ``sizes`` masks the padding: sampling draws indices in [0, sizes[i]) so
+    the pad rows are never read.  This is the representation that lets batch
+    sampling live *inside* a lowered round loop (no host sync per round).
+
+    Registered as a pytree so the compiled engine takes it as a runtime
+    argument: one compiled program serves every federation with the same
+    shapes (the engine's runner cache keys on shapes, not data).
+    """
+
+    x: jnp.ndarray        # [n_clients, max_n, d] f32
+    y: jnp.ndarray        # [n_clients, max_n] i32
+    sizes: jnp.ndarray    # [n_clients] i32 valid rows per client
+    test_x: jnp.ndarray   # [n_test, d] f32
+    test_y: jnp.ndarray   # [n_test] i32
+
+    @property
+    def n_clients(self) -> int:
+        return self.x.shape[0]
+
+    def shapes(self) -> Tuple:
+        """Static fingerprint for compiled-program reuse."""
+        return tuple((l.shape, str(l.dtype)) for l in
+                     (self.x, self.y, self.sizes, self.test_x, self.test_y))
+
+
+jax.tree_util.register_dataclass(
+    StackedFederation,
+    data_fields=("x", "y", "sizes", "test_x", "test_y"),
+    meta_fields=(),
+)
+
+
+def stack_federation(fed: FederatedData) -> StackedFederation:
+    """Pad the ragged client shards into one device-resident array set."""
+    max_n = max(len(xi) for xi in fed.x)
+    xs = np.zeros((fed.n_clients, max_n, fed.n_features), np.float32)
+    ys = np.zeros((fed.n_clients, max_n), np.int32)
+    for ci, (xi, yi) in enumerate(zip(fed.x, fed.y)):
+        xs[ci, : len(xi)] = xi
+        ys[ci, : len(yi)] = yi
+    return StackedFederation(
+        x=jnp.asarray(xs),
+        y=jnp.asarray(ys),
+        sizes=jnp.asarray(fed.data_sizes().astype(np.int32)),
+        test_x=jnp.asarray(fed.test_x),
+        test_y=jnp.asarray(fed.test_y),
+    )
+
+
+def sample_round_batches(key, stack: StackedFederation, local_steps: int,
+                         batch: int) -> Dict[str, jnp.ndarray]:
+    """jit-safe analogue of :func:`round_batches`: uniform with-replacement
+    draws from each client's valid rows, leaves [n_clients, steps, batch, ...].
+    """
+    keys = jax.random.split(key, stack.n_clients)
+
+    def per_client(k, xi, yi, size):
+        idx = jax.random.randint(k, (local_steps, batch), 0, size)
+        return xi[idx], yi[idx]
+
+    xs, ys = jax.vmap(per_client)(keys, stack.x, stack.y, stack.sizes)
     return {"x": xs, "y": ys}

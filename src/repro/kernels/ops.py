@@ -11,7 +11,18 @@ import jax.numpy as jnp
 from repro.kernels import dp_clip_noise as _dp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
+from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rg
+
+
+def pallas_backend_ready() -> bool:
+    """True when the default backend can compile+run the Pallas TPU kernels.
+
+    The FL aggregation path keys its DP routing off this: the fused
+    clip+noise kernel on TPU, the ``kernels.ref`` jnp fallback elsewhere
+    (interpret-mode Pallas is for validation, not production CPU runs).
+    """
+    return jax.default_backend() == "tpu"
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
@@ -38,11 +49,20 @@ def dp_clip_noise(x, noise, clip: float, sigma: float, *, interpret: bool = True
 
 
 def dp_clip_noise_tree(tree, key, clip: float, sigma: float, *,
-                       interpret: bool = True):
+                       interpret: Optional[bool] = None):
     """Pytree version with a SHARED global norm (client-level DP contract —
     identical semantics to core.dp.privatize_update(mode='clipped')).
 
+    ``interpret=None`` auto-routes: compiled Pallas when the backend is TPU,
+    the ``kernels.ref`` pure-jnp fallback on CPU (same key-split order, so
+    both paths produce bit-identical noise).  Pass ``interpret=True`` to
+    force interpret-mode Pallas (kernel validation on CPU).
+
     Returns (noised_tree, pre_clip_global_norm)."""
+    if interpret is None:
+        if not pallas_backend_ready():
+            return _ref.dp_clip_noise_tree_ref(tree, key, clip, sigma)
+        interpret = False
     leaves, treedef = jax.tree.flatten(tree)
     total = sum(
         _dp.sumsq(l.reshape(-1), interpret=interpret) for l in leaves

@@ -59,6 +59,28 @@ def dp_clip_noise_ref(x, noise_unit, clip: float, sigma: float,
     return (x.astype(jnp.float32) * scale + sigma * noise_unit).astype(x.dtype)
 
 
+def dp_clip_noise_tree_ref(tree, key, clip: float, sigma: float):
+    """Pure-jnp tree fallback with the SAME contract as
+    ``kernels.ops.dp_clip_noise_tree``: shared global norm across leaves,
+    one noise key per leaf (split order = leaf order).  This is the CPU
+    fallback the FL aggregation path uses when no TPU is attached.
+
+    Returns (noised_tree, pre_clip_global_norm).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    norm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+    scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        (l.astype(jnp.float32) * scale
+         + sigma * jax.random.normal(k, l.shape, jnp.float32)).astype(l.dtype)
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, out), norm
+
+
 def rglru_scan_ref(a, x, h0=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sequential-oracle linear recurrence h_t = a_t·h_{t-1} + x_t.
 

@@ -56,6 +56,24 @@ def accuracy(params, x, y) -> jnp.ndarray:
     return jnp.mean((jnp.argmax(mlp_logits(params, x), axis=-1) == y).astype(jnp.float32))
 
 
+def auc_roc_jnp(scores, labels) -> jnp.ndarray:
+    """jit-safe rank AUC (Mann-Whitney U normalisation) — traceable inside
+    ``lax.scan``, so the compiled engine can emit AUC history without host
+    round-trips.  No average-rank tie correction: scores are continuous
+    softmax outputs, so ties have measure zero (``auc_roc`` below remains the
+    tie-exact host oracle)."""
+    s = scores.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    n_pos = jnp.sum(y)
+    n_neg = y.shape[0] - n_pos
+    order = jnp.argsort(s)
+    ranks = jnp.zeros_like(s).at[order].set(
+        jnp.arange(1, s.shape[0] + 1, dtype=jnp.float32)
+    )
+    u = jnp.sum(ranks * y) - n_pos * (n_pos + 1.0) / 2.0
+    return u / jnp.maximum(n_pos * n_neg, 1.0)
+
+
 def auc_roc(scores, labels) -> float:
     """Rank-based AUC-ROC (equivalent to the Mann-Whitney U statistic
     normalisation) — no sklearn in this environment."""

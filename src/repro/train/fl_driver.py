@@ -14,28 +14,46 @@ Methods:
   adafl           — AdaFL-style history-weighted selection [3]-lite
   power_of_choice — power-of-choice selection
 
+Execution engines (docs/ARCHITECTURE.md):
+
+* :func:`run_fl` / :func:`run_fl_batch` — the COMPILED engine.  The whole
+  round loop is one ``jax.lax.scan`` (batch sampling, round step, time
+  model and eval all lowered); ``run_fl_batch`` additionally ``jax.vmap``s
+  the scanned loop over a seed axis, so one compiled program produces every
+  repeated trial of a (method, dataset) cell.  There is no host sync until
+  the final history readback.
+* :func:`run_fl_legacy` — the original per-round Python loop, kept as the
+  semantic oracle: tests/test_engine.py checks the scanned engine against
+  it, and benchmarks/bench_engine.py records the old-vs-new rounds/sec
+  comparison in BENCH_engine.json.
+
 Time model (the container has one CPU; the paper measured a GPU workstation):
 simulated round time = slowest selected client's local compute
 (steps × base_step_time / compute_capacity_i) + communication + DP overhead
 + checkpoint writes + Weibull-expected recovery — every term is derived from
 the same FLConfig/fault model the rest of the framework uses, so *relative*
-times across methods are meaningful (EXPERIMENTS.md reports those).
+times across methods are meaningful (EXPERIMENTS.md §Time-model reports
+those).  :func:`simulate_round_time` is pure ``jnp`` so the accumulator can
+ride inside the scan carry.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import FLConfig
+from repro.core import dp as dp_lib
 from repro.core import rounds as rounds_lib
-from repro.core.fault import optimal_checkpoint_interval
-from repro.data.synthetic import FederatedData, round_batches
+from repro.data.synthetic import (FederatedData, StackedFederation,
+                                  round_batches, sample_round_batches,
+                                  stack_federation)
 from repro.models import mlp as mlp_lib
 
 METHODS = ("proposed", "proposed_noft", "acfl", "fedl2p", "random", "adafl",
@@ -92,7 +110,7 @@ def _personalize(params, fed: FederatedData, steps: int = 3, lr: float = 0.05,
     returns the average personalised test metrics."""
     rng = np.random.default_rng(seed)
     grad_fn = jax.jit(jax.grad(mlp_lib.mlp_loss))
-    accs, scores_all, labels_all = [], [], []
+    accs, scores_all = [], []
     for ci in range(fed.n_clients):
         p = params
         for _ in range(steps):
@@ -113,25 +131,221 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
                         base_step_time: float = 0.02,
                         comm_time: float = 0.35,
                         ckpt_write: float = 0.08,
-                        param_kb: float = 64.0) -> float:
-    """Paper-faithful wall-time model for one round (see module docstring)."""
-    sel = np.asarray(sel_mask) > 0
-    if not sel.any():
-        return comm_time
-    capacity = np.asarray(util_state.compute)[sel]
+                        param_kb: float = 64.0) -> jnp.ndarray:
+    """Paper-faithful wall-time model for one round (see module docstring).
+
+    Pure ``jnp`` — jit-safe, so the cumulative simulated time is carried
+    through the ``lax.scan`` state instead of syncing to NumPy every round.
+    Branching on FLConfig fields is fine: the config is trace-time static.
+    """
+    sel = sel_mask > 0
+    any_sel = jnp.any(sel)
     steps = fl.local_epochs
-    compute = steps * base_step_time / np.maximum(capacity, 0.1)
-    slowest = float(np.max(compute))
+    compute = steps * base_step_time / jnp.maximum(util_state.compute, 0.1)
+    slowest = jnp.max(jnp.where(sel, compute, 0.0))
     t = slowest + comm_time * (1.0 + param_kb / 1024.0)
     if fl.dp_enabled:
-        t += 0.01  # clip+noise pass
+        t = t + 0.01  # clip+noise pass
+    n_failed_sel = jnp.sum(jnp.where(sel, failed, 0.0))
     if fl.fault_tolerance:
-        t += ckpt_write * max(1, steps // 2)
-        t += float(np.asarray(failed)[sel].sum()) * fl.recovery_time * 0.01
+        t = t + ckpt_write * max(1, steps // 2)
+        t = t + n_failed_sel * (fl.recovery_time * 0.01)
     else:
         # failed clients redo the whole round next time: amortised penalty
-        t += float(np.asarray(failed)[sel].sum()) * slowest
-    return t
+        t = t + n_failed_sel * slowest
+    return jnp.where(any_sel, t, comm_time)
+
+
+def spent_epsilon(fl: FLConfig, rounds: int) -> float:
+    """DP budget actually spent: RDP accountant over the executed rounds
+    (shared by both engines so ε is engine-independent by construction)."""
+    if not fl.dp_enabled:
+        return 0.0
+    sigma = (fl.dp_sigma if fl.dp_mode == "paper"
+             else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip))
+    acct = dp_lib.RdpAccountant(fl.dp_delta)
+    q = fl.clients_per_round / fl.n_clients
+    z = max(sigma / max(fl.dp_clip, 1e-9), 1e-3)
+    for _ in range(rounds):
+        acct.step(z, q)
+    return acct.epsilon()
+
+
+# ---------------------------------------------------------------------------
+# Compiled engine: lax.scan over rounds, vmap over seeds
+# ---------------------------------------------------------------------------
+
+
+def _eval_rounds(rounds: int, eval_every: int) -> List[int]:
+    """0-based round indices the legacy loop evaluated at."""
+    return [r for r in range(rounds)
+            if (r + 1) % eval_every == 0 or r == rounds - 1]
+
+
+def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
+                      n_classes: int):
+    """``single_run(key, stack, data_size, data_quality) -> (final_params,
+    sim_time, eval trace)``, a pure function of the seed key and the
+    (runtime-argument) federation.
+
+    Structure: a NESTED scan.  The inner ``lax.scan`` advances ``eval_every``
+    rounds carrying (RoundState, data key, cumulative simulated time); the
+    outer scan runs one inner block per eval point and computes test
+    accuracy/AUC once per block — the same eval cadence as the legacy loop,
+    so the compiled engine never pays per-round eval (the test-set forward +
+    rank-AUC argsort are ~half a round's compute).  A trailing partial block
+    handles ``rounds % eval_every`` so the final round is always evaluated.
+    """
+    n_full, rem = divmod(rounds, eval_every)
+
+    def single_run(key, stack: StackedFederation, data_size, data_quality):
+        n_clients = stack.n_clients
+        n_features = stack.x.shape[-1]
+        round_step = rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl,
+                                                    n_clients)
+        tx, ty = stack.test_x, stack.test_y
+
+        def one_round(carry, _):
+            state, data_key, cum_time = carry
+            data_key, k_batch = jax.random.split(data_key)
+            batches = sample_round_batches(k_batch, stack, fl.local_epochs,
+                                           fl.local_batch)
+            state, m = round_step(state, batches)
+            cum_time = cum_time + simulate_round_time(fl, state.util,
+                                                      m.sel_mask, m.failed)
+            return (state, data_key, cum_time), (m.global_loss, m.k_effective)
+
+        def eval_block(carry, block_len):
+            carry, (losses, ks) = jax.lax.scan(one_round, carry, None,
+                                               length=block_len)
+            state, _, cum_time = carry
+            acc = mlp_lib.accuracy(state.params, tx, ty)
+            proba = mlp_lib.mlp_predict_proba(state.params, tx)[:, 1]
+            trace = {
+                "loss": losses[-1],
+                "acc": acc,
+                "auc": mlp_lib.auc_roc_jnp(proba, ty),
+                "k": ks[-1],
+                "cum_time": cum_time,
+            }
+            return carry, trace
+
+        params = mlp_lib.init_mlp(jax.random.fold_in(key, 0), n_features,
+                                  hidden, n_classes)
+        state = rounds_lib.init_round_state(
+            params, fl, jax.random.fold_in(key, 1), n_clients=n_clients,
+            data_size=data_size, data_quality=data_quality,
+        )
+        carry = (state, jax.random.fold_in(key, 2), jnp.zeros((), jnp.float32))
+        trace = None
+        if n_full:
+            carry, trace = jax.lax.scan(
+                lambda c, _: eval_block(c, eval_every), carry, None,
+                length=n_full)
+        if rem:
+            carry, tail = eval_block(carry, rem)
+            tail = jax.tree.map(lambda x: x[None], tail)
+            trace = tail if trace is None else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), trace, tail)
+        state, _, sim_time = carry
+        return state.params, sim_time, trace
+
+    return single_run
+
+
+# Compiled runners keyed on (FLConfig, rounds, eval_every, hidden, n_classes,
+# n_seeds, stack shapes): the federation is a runtime pytree argument, so one
+# program serves every same-shaped federation and every repeated call — a
+# sweep compiles each cell once, then runs at device speed.
+_RUNNER_CACHE: Dict = {}
+
+# Device-side federations cached per host FederatedData object, so repeat
+# calls (seed loops, epsilon sweeps) skip the O(n_clients × max_n × d)
+# re-pad + re-upload that stack_federation performs.  Keyed by id() with a
+# weakref guard (FederatedData defines __eq__, so it is unhashable); dead
+# entries are evicted by the weakref callback.
+_STACK_CACHE: Dict[int, tuple] = {}
+
+
+def _device_federation(fed: FederatedData):
+    key = id(fed)
+    entry = _STACK_CACHE.get(key)
+    if entry is None or entry[0]() is not fed:
+        sizes = fed.data_sizes()
+        ref = weakref.ref(fed, lambda _: _STACK_CACHE.pop(key, None))
+        entry = (ref, stack_federation(fed),
+                 jnp.asarray(sizes / sizes.mean()),
+                 jnp.asarray(fed.label_entropy()))
+        _STACK_CACHE[key] = entry
+    return entry[1], entry[2], entry[3]
+
+
+def _get_runner(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
+                n_classes: int, n_seeds: int, stack: StackedFederation):
+    cache_key = (fl, rounds, eval_every, hidden, n_classes, n_seeds,
+                 stack.shapes())
+    runner = _RUNNER_CACHE.get(cache_key)
+    if runner is None:
+        single_run = _build_single_run(fl, rounds, eval_every, hidden,
+                                       n_classes)
+        runner = jax.jit(jax.vmap(single_run, in_axes=(0, None, None, None)))
+        _RUNNER_CACHE[cache_key] = runner
+    return runner
+
+
+def run_fl_batch(
+    fed: FederatedData,
+    fl: FLConfig,
+    method: str = "proposed",
+    seeds: Sequence[int] = (0, 1, 2, 3),
+    rounds: Optional[int] = None,
+    eval_every: int = 10,
+    dataset: str = "unsw",
+    hidden: int = 64,
+) -> List[RunResult]:
+    """All repeated trials of one (method, dataset) cell as ONE compiled
+    program: ``vmap`` over the seed axis of the scanned round loop.
+
+    Per-seed results are bit-for-bit the batched lanes of the single-seed
+    scanned engine (each lane keys off ``jax.random.key(seed)``), so
+    ``run_fl_batch(seeds=[a, b])`` ≈ ``[run_fl(seed=a), run_fl(seed=b)]``
+    at a fraction of the dispatch cost.  ``wall_time_s`` on each result is
+    the batch wall time amortised over the seeds.
+    """
+    fl = fl_for_method(fl, method)
+    rounds = int(rounds or fl.rounds)
+    seeds = [int(s) for s in seeds]
+    t0 = time.time()
+    stack, data_size, data_quality = _device_federation(fed)
+    runner = _get_runner(fl, rounds, eval_every, hidden, fed.n_classes,
+                         len(seeds), stack)
+    keys = jax.vmap(jax.random.key)(jnp.asarray(seeds, jnp.uint32))
+    params_b, sim_b, trace_b = runner(keys, stack, data_size, data_quality)
+    jax.block_until_ready(sim_b)
+    wall_per_seed = (time.time() - t0) / max(len(seeds), 1)
+
+    eps = spent_epsilon(fl, rounds)
+    eval_idx = _eval_rounds(rounds, eval_every)
+    trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
+    results = []
+    for i, seed in enumerate(seeds):
+        history = {"round": [r + 1 for r in eval_idx]}
+        for name in ("loss", "acc", "auc", "k", "cum_time"):
+            history[name] = [float(x) for x in trace_np[name][i]]
+        sim_time = float(sim_b[i])
+        acc, auc = history["acc"][-1], history["auc"][-1]
+        if method == "fedl2p":
+            # personalisation pass (the point of FedL2P) + its simulated cost
+            acc, auc = _personalize(jax.tree.map(lambda x: x[i], params_b),
+                                    fed, seed=seed)
+            sim_time *= 1.2
+        results.append(RunResult(
+            method=method, dataset=dataset, seed=seed,
+            accuracy=acc, auc=auc,
+            sim_time_s=sim_time, wall_time_s=wall_per_seed,
+            rounds=rounds, eps_spent=eps, history=history,
+        ))
+    return results
 
 
 def run_fl(
@@ -144,6 +358,30 @@ def run_fl(
     dataset: str = "unsw",
     hidden: int = 64,
 ) -> RunResult:
+    """Single-seed front door of the compiled engine (a batch of one)."""
+    return run_fl_batch(fed, fl, method, seeds=(seed,), rounds=rounds,
+                        eval_every=eval_every, dataset=dataset,
+                        hidden=hidden)[0]
+
+
+# ---------------------------------------------------------------------------
+# Legacy engine: per-round Python loop (semantic oracle for the scan engine)
+# ---------------------------------------------------------------------------
+
+
+def run_fl_legacy(
+    fed: FederatedData,
+    fl: FLConfig,
+    method: str = "proposed",
+    seed: int = 0,
+    rounds: Optional[int] = None,
+    eval_every: int = 10,
+    dataset: str = "unsw",
+    hidden: int = 64,
+) -> RunResult:
+    """The original dispatch-per-round driver.  Kept (not deprecated) as the
+    reference semantics: host-side NumPy batch sampling, one jit'd round
+    step per iteration, eval pulled to host at every ``eval_every``."""
     fl = fl_for_method(fl, method)
     rounds = rounds or fl.rounds
     rng = np.random.default_rng(seed)
@@ -171,8 +409,8 @@ def run_fl(
             jnp.asarray, round_batches(rng, fed, fl.local_epochs, fl.local_batch)
         )
         state, metrics = round_step(state, batches)
-        sim_time += simulate_round_time(fl, state.util, metrics.sel_mask,
-                                        metrics.failed)
+        sim_time += float(simulate_round_time(fl, state.util, metrics.sel_mask,
+                                              metrics.failed))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             acc = float(mlp_lib.accuracy(state.params, tx, ty))
             proba = np.asarray(mlp_lib.mlp_predict_proba(state.params, tx)[:, 1])
@@ -189,18 +427,7 @@ def run_fl(
         # personalisation pass (the point of FedL2P) + its simulated cost
         acc, auc = _personalize(state.params, fed, seed=seed)
         sim_time *= 1.2
-    # DP budget actually spent (RDP accountant over the executed rounds)
-    from repro.core import dp as dp_lib
-
-    eps = 0.0
-    if fl.dp_enabled:
-        sigma = (fl.dp_sigma if fl.dp_mode == "paper"
-                 else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip))
-        acct = dp_lib.RdpAccountant(fl.dp_delta)
-        q = fl.clients_per_round / fl.n_clients
-        for _ in range(rounds):
-            acct.step(max(sigma / max(fl.dp_clip, 1e-9), 1e-3), q)
-        eps = acct.epsilon()
+    eps = spent_epsilon(fl, rounds)
 
     return RunResult(
         method=method, dataset=dataset, seed=seed,

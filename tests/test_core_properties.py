@@ -1,11 +1,17 @@
 """Property-based tests (hypothesis) on the FL core's invariants
 (deliverable c): DP mechanics, selection, fault math, aggregation, SSD
-algebra."""
+algebra.
+
+``hypothesis`` is an optional test extra (``pip install -e .[test]``, see
+pyproject.toml): the module skips cleanly when it is absent instead of
+breaking collection of the whole suite."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import FLConfig
 from repro.core import dp as dp_lib

@@ -124,11 +124,27 @@ def test_dp_clip_noise_tree_matches_core_dp():
     k1, k2 = jax.random.split(KEY)
     tree = {"a": _rand(k1, (33, 17), jnp.float32) * 5,
             "b": [_rand(k2, (11,), jnp.float32)]}
-    noised, norm = ops.dp_clip_noise_tree(tree, KEY, clip=1.0, sigma=0.0)
+    noised, norm = ops.dp_clip_noise_tree(tree, KEY, clip=1.0, sigma=0.0,
+                                          interpret=True)
     expected, norm2 = dpc.clip_by_global_norm(tree, 1.0)
     np.testing.assert_allclose(float(norm), float(norm2), rtol=1e-6)
     for a, b in zip(jax.tree.leaves(noised), jax.tree.leaves(expected)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_dp_clip_noise_tree_pallas_matches_ref_fallback():
+    """The kernel path (interpret-mode Pallas) and the kernels.ref fallback
+    the CPU aggregation path uses must agree including the NOISE (identical
+    key-split order), so routing by backend never changes semantics."""
+    k1, k2 = jax.random.split(KEY)
+    tree = {"a": _rand(k1, (19, 7), jnp.float32) * 4,
+            "b": [_rand(k2, (257,), jnp.float32)]}
+    kern, n1 = ops.dp_clip_noise_tree(tree, KEY, clip=0.8, sigma=0.3,
+                                      interpret=True)
+    ref, n2 = R.dp_clip_noise_tree_ref(tree, KEY, clip=0.8, sigma=0.3)
+    np.testing.assert_allclose(float(n1), float(n2), rtol=1e-6)
+    for a, b in zip(jax.tree.leaves(kern), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -126,8 +126,10 @@ with mesh:
                      out_shardings=bundle.out_shardings)
     lowered = jitted.lower(*bundle.in_specs)
     compiled = lowered.compile()
-print(json.dumps({"ok": True,
-                  "flops": compiled.cost_analysis().get("flops", -1.0)}))
+cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+    cost = cost[0]
+print(json.dumps({"ok": True, "flops": cost.get("flops", -1.0)}))
 """
 
 
