@@ -13,11 +13,17 @@ Also records the engine-equivalence deltas (final accuracy, ε) between the
 two engines, and writes everything to ``BENCH_engine.json`` at the repo
 root.  Acceptance gate (ISSUE 1): batch over >= 4 seeds must finish in
 < 2x the wall time of ONE legacy single-seed run.
+
+Timing protocol (ISSUE 2): the bench machine is noisy, so warm (execute-
+only) walls are the MEDIAN OF 3 runs, and the one-off XLA compile is
+reported separately (``compile_s_est`` = cold wall − median execute wall)
+instead of conflating cold and warm in a single number.
 """
 from __future__ import annotations
 
 import json
 import os
+import statistics
 import time
 
 import jax
@@ -63,12 +69,17 @@ def run(csv_rows: list) -> dict:
                                    rounds=ROUNDS, eval_every=EVAL_EVERY)
     t_batch = time.time() - t0
 
-    # steady-state: the second call hits fl_driver's compiled-runner cache —
-    # this is what every later cell/repetition of a sweep actually costs.
-    t0 = time.time()
-    fl_driver.run_fl_batch(fed, fl, "proposed", seeds=SEEDS, rounds=ROUNDS,
-                           eval_every=EVAL_EVERY)
-    t_warm = time.time() - t0
+    # steady-state: later calls hit fl_driver's compiled-runner cache — this
+    # is what every later cell/repetition of a sweep actually costs.  Median
+    # of 3 (noisy shared machine; see module docstring).
+    warm_walls = []
+    for _ in range(3):
+        t0 = time.time()
+        fl_driver.run_fl_batch(fed, fl, "proposed", seeds=SEEDS,
+                               rounds=ROUNDS, eval_every=EVAL_EVERY)
+        warm_walls.append(time.time() - t0)
+    t_warm = statistics.median(warm_walls)
+    compile_s = max(t_batch - t_warm, 0.0)
 
     n_seeds = len(SEEDS)
     report = {
@@ -88,6 +99,9 @@ def run(csv_rows: list) -> dict:
             "n_seeds": n_seeds,
             "wall_s_cold": t_batch,
             "seed_rounds_per_s_cold": n_seeds * ROUNDS / t_batch,
+            "execute_s_median_of_3": t_warm,
+            "execute_s_all": warm_walls,
+            "compile_s_est": compile_s,
             "wall_s_warm": t_warm,
             "seed_rounds_per_s_warm": n_seeds * ROUNDS / t_warm,
         },
@@ -122,8 +136,9 @@ def run(csv_rows: list) -> dict:
     print(f"  scan   single-seed : {t_scan:7.2f}s "
           f"({ROUNDS / t_scan:6.1f} rounds/s, incl. compile)")
     print(f"  batch x{n_seeds} cold      : {t_batch:7.2f}s "
-          f"({n_seeds * ROUNDS / t_batch:6.1f} seed-rounds/s)")
-    print(f"  batch x{n_seeds} warm      : {t_warm:7.2f}s "
+          f"({n_seeds * ROUNDS / t_batch:6.1f} seed-rounds/s, "
+          f"compile ~{compile_s:.2f}s)")
+    print(f"  batch x{n_seeds} warm      : {t_warm:7.2f}s median-of-3 "
           f"({n_seeds * ROUNDS / t_warm:6.1f} seed-rounds/s)")
     print(f"  acceptance: batch x{n_seeds} < 2x legacy single -> "
           f"{report['acceptance']['pass_under_2x']} "

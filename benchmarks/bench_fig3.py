@@ -2,31 +2,35 @@
 
 Paper: UNSW accuracy 86%→89% as ε goes 10→100 (loss 3→2.5); ROAD 73%→82%
 (loss 10→9).  Claim validated here: accuracy increases monotonically-ish and
-loss decreases as ε grows (less noise), on both datasets.  Each ε point runs
-its seeds as one compiled batch (benchmarks/common.py).
+loss decreases as ε grows (less noise), on both datasets.  The whole ε
+column of a dataset runs as ONE compiled sweep program — ε is a runtime
+FLParams lane, so the grid pays a single compile (benchmarks/common.py
+``run_sweep_cells``; see EXPERIMENTS.md §Sweeps).
 """
 from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import N_SEEDS, base_fl, mean_of, run_grid
+from benchmarks.common import N_SEEDS, base_fl, run_sweep_cells
 
 EPSILONS = (30.0, 100.0, 300.0, 1000.0)
 DATASETS = ("unsw", "road")
 
 
 def run(csv_rows: list):
-    print("\n== Fig. 3: privacy budget sweep ==")
+    print("\n== Fig. 3: privacy budget sweep (one program per dataset) ==")
     print(f"{'dataset':8s} {'eps/round':>9s} {'acc%':>7s} {'auc':>7s} {'final loss':>11s}")
+    seeds = range(max(2, N_SEEDS // 2))
     results = {}
     for ds in DATASETS:
+        cells = [(f"eps{eps}", dataclasses.replace(base_fl(), dp_epsilon=eps))
+                 for eps in EPSILONS]
+        by_tag = run_sweep_cells("proposed", ds, cells, seeds=seeds)
         accs = []
         for eps in EPSILONS:
-            fl = dataclasses.replace(base_fl(), dp_epsilon=eps)
-            rows = run_grid(["proposed"], [ds], seeds=range(max(2, N_SEEDS // 2)),
-                            fl=fl, tag=f"eps{eps}")
-            acc = mean_of(rows, "proposed", ds, "accuracy") * 100
-            auc = mean_of(rows, "proposed", ds, "auc")
+            rows = by_tag[f"eps{eps}"]
+            acc = sum(r["accuracy"] for r in rows) / len(rows) * 100
+            auc = sum(r["auc"] for r in rows) / len(rows)
             loss = sum(r["history"]["loss"][-1] for r in rows) / len(rows)
             print(f"{ds:8s} {eps:9.1f} {acc:7.1f} {auc:7.3f} {loss:11.3f}")
             csv_rows.append((f"fig3/{ds}/eps{eps}/acc_pct", 0.0, acc))

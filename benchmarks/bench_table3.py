@@ -8,7 +8,9 @@ converged-half round-wise samples of every seed and report both:
 accuracy significance reproduces the paper's conclusion; AUC does not
 separate on the stand-ins (flagged honestly in EXPERIMENTS.md §Table-III).
 The repeated trials the U test needs are cheap: every cell's seeds run as
-one compiled batch (EXPERIMENTS.md §Engine).
+one compiled sweep lane batch (methods differ in STATIC selection strategy,
+so each method compiles its own program; within a method the seeds — and
+any runtime grid — share it.  EXPERIMENTS.md §Sweeps).
 """
 from __future__ import annotations
 

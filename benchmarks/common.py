@@ -4,20 +4,22 @@ Runs (method × dataset × seed) FL trainings once and caches RunResults in
 ``benchmarks/artifacts/fl_results.json`` so Tables I/II/III and Fig. 3 reuse
 the same trials (the paper also reports means over 10 repeated trials).
 
-All uncached seeds of a (method, dataset) cell run as ONE compiled program
-via ``run_fl_batch`` (the scan/vmap engine, EXPERIMENTS.md §Engine) — the
-grid is hardware-bound, not dispatch-bound.
+All uncached cells of a (method, dataset) GRID run as ONE compiled program
+via ``run_fl_sweep`` (the seed×config lane engine, EXPERIMENTS.md §Sweeps):
+an ε column (Fig. 3) or a failure-probability ablation (Table II) is a
+single compile + a single batched device program, not one per grid point.
+Single cells go through the same path (``run_sweep_cells`` with one cell).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FLConfig
 from repro.data.synthetic import make_federated
-from repro.train.fl_driver import RunResult, run_fl_batch
+from repro.train.fl_driver import RunResult, run_fl_sweep
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 CACHE = os.path.join(ARTIFACT_DIR, "fl_results.json")
@@ -56,8 +58,10 @@ def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
 
 # Cache-key version: bump when the engine's stochastic process changes so a
 # cell can never silently mix trials from different engines (the scan/vmap
-# engine replaced the legacy loop's host-NumPy batch stream in PR 1).
-ENGINE_REV = "scan1"
+# engine replaced the legacy loop's host-NumPy batch stream in PR 1;
+# "sweep2": runtime FLParams — the DP noise scale is now derived from
+# traced f32 scalars on device instead of a host f64 constant).
+ENGINE_REV = "sweep2"
 
 
 def _key(method, dataset, seed, tag):
@@ -89,22 +93,43 @@ def get_fed(dataset: str, seed: int = 0):
     return _FEDS[k]
 
 
+def run_sweep_cells(method: str, dataset: str,
+                    cells: Sequence[Tuple[str, FLConfig]],
+                    seeds: Sequence[int],
+                    rounds: Optional[int] = None) -> Dict[str, List[dict]]:
+    """A whole (method, dataset) GRID — ``cells`` is a list of
+    ``(tag, FLConfig)`` differing only in runtime knobs — through the sweep
+    engine: every uncached cell × seed lane runs in ONE compiled program
+    (one ``_get_runner`` miss for the grid, see docs/ARCHITECTURE.md).
+
+    Returns ``{tag: [result dict per seed]}``.  Cache granularity stays
+    (method, dataset, seed, tag); a cell re-runs all its seeds when any one
+    is missing (the lane is marginal cost next to a partial-cache dance).
+    """
+    cache = _load()
+    seeds = [int(s) for s in seeds]
+    missing = [(tag, cfg) for tag, cfg in cells
+               if any(_key(method, dataset, s, tag) not in cache
+                      for s in seeds)]
+    if missing:
+        fed = get_fed(dataset, seed=0)  # same federation across seeds; seed varies FL
+        grid = run_fl_sweep(fed, missing[0][1], [cfg for _, cfg in missing],
+                            seeds=seeds, method=method,
+                            rounds=rounds or ROUNDS, dataset=dataset)
+        for (tag, _), row in zip(missing, grid):
+            for res in row:
+                cache[_key(method, dataset, res.seed, tag)] = dataclasses.asdict(res)
+        _save(cache)
+    return {tag: [cache[_key(method, dataset, s, tag)] for s in seeds]
+            for tag, _ in cells}
+
+
 def run_cell(method: str, dataset: str, seeds: Sequence[int],
              fl: Optional[FLConfig] = None, tag: str = "default",
              rounds: Optional[int] = None) -> List[dict]:
-    """All seeds of one (method, dataset) cell.  Uncached seeds run together
-    in one ``run_fl_batch`` call — one compile, one device program."""
-    cache = _load()
-    seeds = [int(s) for s in seeds]
-    missing = [s for s in seeds if _key(method, dataset, s, tag) not in cache]
-    if missing:
-        fed = get_fed(dataset, seed=0)  # same federation across seeds; seed varies FL
-        results = run_fl_batch(fed, fl or base_fl(), method, seeds=missing,
-                               rounds=rounds or ROUNDS, dataset=dataset)
-        for res in results:
-            cache[_key(method, dataset, res.seed, tag)] = dataclasses.asdict(res)
-        _save(cache)
-    return [cache[_key(method, dataset, s, tag)] for s in seeds]
+    """All seeds of one (method, dataset) cell — a sweep of one config."""
+    return run_sweep_cells(method, dataset, [(tag, fl or base_fl())], seeds,
+                           rounds=rounds)[tag]
 
 
 def run_cached(method: str, dataset: str, seed: int, fl: Optional[FLConfig] = None,

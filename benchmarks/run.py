@@ -5,6 +5,8 @@ the human-readable tables stream as each section runs.
 
   engine — legacy Python-loop driver vs compiled scan/vmap engine
            (writes BENCH_engine.json at the repo root)
+  sweep  — one-program-per-sweep vs one-program-per-cell
+           (writes BENCH_sweep.json at the repo root)
   table1 — method comparison (paper Table I)
   table2 — fault tolerance ablation (paper Table II)
   fig3   — privacy budget sweep (paper Fig. 3)
@@ -12,8 +14,9 @@ the human-readable tables stream as each section runs.
   kernels— per-kernel CPU-interpret timings vs jnp oracle
   roofline — summarised from dry-run artifacts (if present)
 
-The paper tables run every uncached (method, dataset) cell's seeds as one
-compiled program (run_fl_batch); see EXPERIMENTS.md §Engine.
+The paper tables run every uncached (method, dataset) GRID as one compiled
+program (run_fl_sweep — runtime hyper-parameter lanes); see EXPERIMENTS.md
+§Sweeps.
 
 Env: REPRO_FULL=1 for the paper's full 40-client/200-round/10-seed setting.
 """
@@ -70,10 +73,11 @@ def main() -> None:
     csv_rows = []
     t0 = time.time()
 
-    from benchmarks import (bench_engine, bench_table1, bench_table2,
-                            bench_table3, bench_fig3)
+    from benchmarks import (bench_engine, bench_sweep, bench_table1,
+                            bench_table2, bench_table3, bench_fig3)
 
     bench_engine.run(csv_rows)
+    bench_sweep.run(csv_rows)
     bench_table1.run(csv_rows)
     bench_table2.run(csv_rows)
     bench_fig3.run(csv_rows)

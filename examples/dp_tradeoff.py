@@ -6,7 +6,10 @@ Shows:
   2. the composed ε over rounds from the RDP accountant (the paper reports
      only the per-release budget),
   3. calibrating σ to hit a TOTAL ε budget over the whole run
-     (``noise_multiplier_for_budget``) — the deployment-correct workflow.
+     (``noise_multiplier_for_budget``) — the deployment-correct workflow,
+  4. the sweep engine: the whole ε grid of (1) as ONE compiled program —
+     ε is a runtime FLParams lane, so N budgets cost one compile
+     (``run_fl_sweep``; docs/ARCHITECTURE.md §Sweeps).
 
 Run:  PYTHONPATH=src python examples/dp_tradeoff.py
 """
@@ -18,7 +21,7 @@ from repro.configs.base import FLConfig
 from repro.core.dp import (RdpAccountant, gaussian_sigma,
                            noise_multiplier_for_budget)
 from repro.data.synthetic import make_federated
-from repro.train.fl_driver import run_fl
+from repro.train.fl_driver import run_fl, run_fl_sweep
 
 ROUNDS = 40
 
@@ -52,6 +55,17 @@ def main():
         z = noise_multiplier_for_budget(eps_total, 1e-5, ROUNDS, q=6 / 20)
         print(f"  total eps={eps_total:5.1f} over {ROUNDS} rounds -> "
               f"noise multiplier z={z:.3f} (sigma={z*5.0:.3f} at clip=5)")
+
+    print("\n== 4. an epsilon GRID as one compiled sweep program ==")
+    fl = dataclasses.replace(base, dp_mode="clipped")
+    epsilons = (10.0, 50.0, 200.0, 1000.0)
+    grid = run_fl_sweep(fed, fl, [{"dp_epsilon": e} for e in epsilons],
+                        seeds=(0, 1), rounds=ROUNDS, eval_every=10)
+    for eps, row in zip(epsilons, grid):
+        acc = np.mean([r.accuracy for r in row])
+        print(f"  eps/round={eps:7.1f}  acc={acc*100:5.1f}% "
+              f"(composed eps={row[0].eps_spent:9.2f}, {len(row)} seeds, "
+              f"same program as every other row)")
 
 
 if __name__ == "__main__":

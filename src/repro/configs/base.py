@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Model configuration
@@ -186,7 +186,19 @@ INPUT_SHAPES = {
 
 @dataclass(frozen=True)
 class FLConfig:
-    """Hyper-parameters of Algorithm 1 and its substrate."""
+    """Hyper-parameters of Algorithm 1 and its substrate.
+
+    Two kinds of fields live here (docs/ARCHITECTURE.md §Static/runtime):
+
+    * STATIC — shapes, the execution plan, strategy names and booleans that
+      gate code structure.  Changing one compiles a new XLA program.
+    * RUNTIME (``RUNTIME_FIELDS``) — scalar knobs (learning rates, DP
+      budget, failure/availability probabilities, selection temperature,
+      adaptive-K thresholds).  The engine reads these from an
+      :class:`FLParams` pytree argument at run time, so a whole sweep over
+      them shares ONE compiled program; :func:`fl_static` canonicalises a
+      config to its static part for program-cache keying.
+    """
 
     n_clients: int = 40
     clients_per_round: int = 8          # K (initial value when adaptive)
@@ -202,6 +214,10 @@ class FLConfig:
     alpha: float = 1.0                  # accuracy weight in F(S_t)
     gamma: float = 0.1                  # cost weight in F(S_t)
     utility_ema: float = 0.5
+    explore_noise: float = 0.05         # selection temperature (Gumbel scale)
+    avail_prob: float = 0.95            # per-client per-round availability
+    k_tol: float = 1e-3                 # adaptive-K plateau tolerance
+    k_patience: float = 3.0             # adaptive-K plateau patience (rounds)
     # update-coherence scoring (cos(Δ_i, Δ_agg) data-quality observable,
     # DESIGN.md §4).  Costs one extra all-reduce of params-size per client in
     # the client_parallel plan — negligible for the paper's MLP, material for
@@ -228,6 +244,50 @@ class FLConfig:
     plan: str = "client_parallel"       # client_parallel | client_serial
     serial_clients_in_step: int = 4     # K folded into one lowered round step
     local_steps_in_step: int = 1        # local SGD steps per client in the step
+
+
+class FLParams(NamedTuple):
+    """The RUNTIME half of :class:`FLConfig` — a pytree of scalars the
+    compiled round step takes as an argument instead of closing over.
+
+    Every field is a plain float (host construction) or a 0-d/`[lanes]`
+    ``jnp`` array (inside the engine); the round step never branches on
+    them, so one compiled program serves any values — and a stacked
+    ``[lanes]`` axis of them turns an entire hyper-parameter sweep into one
+    vmapped program (``train/fl_driver.run_fl_sweep``).
+    """
+
+    local_lr: float = 0.05
+    server_lr: float = 1.0
+    dp_epsilon: float = 8.0
+    dp_sigma: float = 0.01
+    dp_clip: float = 1.0
+    failure_prob: float = 0.05
+    recovery_time: float = 30.0
+    avail_prob: float = 0.95
+    explore_noise: float = 0.05
+    k_tol: float = 1e-3
+    k_patience: float = 3.0
+
+
+# FLConfig fields mirrored by FLParams (single source of truth for the
+# static/runtime split — fl_params/fl_static derive from this tuple).
+RUNTIME_FIELDS = tuple(FLParams._fields)
+
+
+def fl_params(fl: FLConfig) -> FLParams:
+    """Extract the runtime knobs of ``fl`` as an :class:`FLParams` pytree."""
+    return FLParams(**{f: getattr(fl, f) for f in RUNTIME_FIELDS})
+
+
+def fl_static(fl: FLConfig) -> FLConfig:
+    """Canonical STATIC part of ``fl``: every runtime field reset to its
+    dataclass default.  Two configs that differ only in runtime knobs map to
+    the same static config — the compiled-program cache keys on this, so an
+    ε/failure/lr grid compiles exactly once per (plan, shapes) cell."""
+    defaults = {f: FLConfig.__dataclass_fields__[f].default
+                for f in RUNTIME_FIELDS}
+    return dataclasses.replace(fl, **defaults)
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,14 @@ def gaussian_sigma(epsilon: float, delta: float, sensitivity: float = 1.0) -> fl
     return sensitivity * math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon
 
 
+def gaussian_sigma_rt(epsilon, delta: float, sensitivity=1.0):
+    """Trace-safe :func:`gaussian_sigma`: ``epsilon``/``sensitivity`` may be
+    traced jnp scalars (runtime FLParams inside a compiled round step);
+    ``delta`` stays a static Python float so the log/sqrt fold on the host.
+    No validation — callers own the ε > 0 contract."""
+    return sensitivity * (math.sqrt(2.0 * math.log(1.25 / delta)) / epsilon)
+
+
 # ---------------------------------------------------------------------------
 # Pytree mechanics
 # ---------------------------------------------------------------------------

@@ -39,6 +39,16 @@ def weibull_failure_prob(t_c, lam: float, k: float):
     return 1.0 - np.exp(-((t / lam) ** k))
 
 
+def recovery_overhead(recovery_time, frac: float = 0.01):
+    """Per-failed-client recovery term of the simulated round-time model
+    (``train/fl_driver.simulate_round_time``): under fault tolerance a
+    checkpoint restart resumes near the failure point, so only ``frac·t_r``
+    is charged per failure.  Pure arithmetic — ``recovery_time`` is a
+    runtime FLParams scalar (traced inside the engine), so failure-model
+    sweeps ride one compiled program."""
+    return recovery_time * frac
+
+
 def checkpoint_cost(t_c, T: float, t_r: float, lam: float, k: float,
                     write_cost: Optional[float] = None):
     """Paper cost model C(t_c) = t_c/T + p_f(t_c)·t_r/T (write_cost=None),

@@ -19,6 +19,16 @@ accounted by the cost model in ``core/fault.py`` at the driver level.
 Differential privacy: each selected client's update Δ_i is clipped and
 noised (``core/dp.py``) *before* aggregation — noise on updates, never on
 utility scores, exactly as the paper specifies.
+
+Static/runtime split (docs/ARCHITECTURE.md): the builders close over the
+STATIC part of ``FLConfig`` only (shapes, plan, strategy name, booleans
+that gate code structure).  Scalar hyper-parameters — learning rates, DP
+budget, failure/availability probabilities, selection temperature,
+adaptive-K thresholds — enter the built ``round_step`` as a runtime
+:class:`FLParams` pytree argument (``round_step(state, batches, params)``),
+so one compiled step serves an entire hyper-parameter grid.  Omitting
+``params`` falls back to the values baked in the builder's config, which
+keeps the original two-argument call sites working unchanged.
 """
 from __future__ import annotations
 
@@ -28,7 +38,7 @@ from typing import Any, Callable, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import FLConfig
+from repro.configs.base import FLConfig, FLParams, fl_params
 from repro.core import aggregation as agg
 from repro.core import dp as dp_lib
 from repro.core import selection as sel_lib
@@ -101,11 +111,14 @@ def microbatched_value_and_grad(loss_fn, grad_accum: int):
 
 def _local_train_fn(loss_fn, fl: FLConfig, grad_accum: int = 1):
     """One client's local training: scan over local steps with step masking
-    (effective_steps implements checkpoint-recovery truncation)."""
+    (effective_steps implements checkpoint-recovery truncation).
+
+    ``lr`` is a runtime scalar (FLParams.local_lr) — a traced value is fine,
+    so learning-rate sweeps share one compiled program."""
     vag = microbatched_value_and_grad(loss_fn, grad_accum)
 
-    def local_train(global_params, step_batches, effective_steps):
-        opt = sgd(fl.local_lr)
+    def local_train(global_params, step_batches, effective_steps, lr):
+        opt = sgd(lr)
 
         def step(carry, xs):
             p, s = carry
@@ -146,13 +159,22 @@ def _effective_steps(fail_step, local_steps: int, ckpt_every: int, ft_enabled: b
 # ---------------------------------------------------------------------------
 
 
+def _dp_sigma(fl: FLConfig, pr: FLParams):
+    """Noise scale from runtime params (trace-safe; dp_mode stays static)."""
+    if fl.dp_mode == "paper":
+        return pr.dp_sigma
+    return dp_lib.gaussian_sigma_rt(pr.dp_epsilon, fl.dp_delta, pr.dp_clip)
+
+
 def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
                         ckpt_every_steps: int = 2,
                         dp_use_kernel: Optional[bool] = None,
                         grad_accum: int = 1, delta_constraint=None):
-    """Build ``round_step(state, batches) -> (state, metrics)``.
+    """Build ``round_step(state, batches, params=None) -> (state, metrics)``.
 
     batches: pytree whose leaves have leading [n_clients, local_steps, ...].
+    ``params``: runtime :class:`FLParams`; ``None`` uses the builder config's
+    values (back-compat).  Only the STATIC part of ``fl`` is closed over.
     ``delta_constraint``: optional fn applied to the stacked client deltas —
     steps.py uses it to pin the client axis onto the data mesh axes so GSPMD
     never materialises every client's weights on one shard.
@@ -161,33 +183,34 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
     is TPU, the ``kernels/ref.py`` jnp fallback on CPU — ``core/dp.py``'s
     accountant stays the source of truth for ε either way.
     """
-    server = make_server_optimizer(fl.server_opt, fl.server_lr)
     strategy = sel_lib.get_strategy(fl.selection)
     local_train = _local_train_fn(loss_fn, fl, grad_accum)
     k_max = int(fl.k_max or n_clients)
-    sigma = (
-        fl.dp_sigma
-        if fl.dp_mode == "paper"
-        else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip)
-    )
+    default_params = fl_params(fl)
 
-    def round_step(state: RoundState, batches) -> Tuple[RoundState, RoundMetrics]:
+    def round_step(state: RoundState, batches,
+                   params: Optional[FLParams] = None
+                   ) -> Tuple[RoundState, RoundMetrics]:
+        pr = default_params if params is None else params
+        server = make_server_optimizer(fl.server_opt, pr.server_lr)
         rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
 
         # ---- GetAvailableClients (Alg.1 line 3) ----
-        avail = jax.random.bernoulli(k_avail, 0.95, (n_clients,)).astype(jnp.float32)
+        avail = jax.random.bernoulli(k_avail, pr.avail_prob,
+                                     (n_clients,)).astype(jnp.float32)
 
         # ---- ComputeUtility + SelectTopK (line 4) ----
         utility = sel_lib.compute_utility(state.util, fl)
         k_eff = (state.kctl.k if fl.adaptive_k
                  else jnp.asarray(float(fl.clients_per_round), jnp.float32))
-        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, k_max)
+        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, k_max,
+                            pr.explore_noise)
 
         # ---- failure injection + checkpoint-recovery truncation ----
         # failure happens with prob p_f, uniformly within local steps
         local_steps = jax.tree.leaves(batches)[0].shape[1]
         fails = jax.random.bernoulli(jax.random.fold_in(k_fail, 1),
-                                     fl.failure_prob, (n_clients,))
+                                     pr.failure_prob, (n_clients,))
         fail_at = jnp.where(
             fails, jax.random.randint(jax.random.fold_in(k_fail, 2),
                                       (n_clients,), 0, local_steps), local_steps
@@ -198,18 +221,19 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
 
         # ---- local training, in parallel over clients (line 5) ----
         deltas, pre_loss, post_loss = jax.vmap(
-            local_train, in_axes=(None, 0, 0)
-        )(state.params, batches, eff_steps)
+            local_train, in_axes=(None, 0, 0, None)
+        )(state.params, batches, eff_steps, pr.local_lr)
         if delta_constraint is not None:
             deltas = delta_constraint(deltas)
 
         # ---- DP: noise on updates, not on scores (lines 8-9) ----
         if fl.dp_enabled:
+            sigma = _dp_sigma(fl, pr)
             keys = jax.random.split(k_dp, n_clients)
 
             def privatize(d, k):
                 return dp_lib.privatize_update(
-                    d, k, mode=fl.dp_mode, clip=fl.dp_clip, sigma=sigma,
+                    d, k, mode=fl.dp_mode, clip=pr.dp_clip, sigma=sigma,
                     use_kernel=dp_use_kernel,
                 )
 
@@ -251,7 +275,8 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         global_loss = jnp.sum(post_loss * contrib_mask) / sel_denom
         util = sel_lib.update_utility_state(state.util, contrib_mask, pre_loss,
                                             post_loss, fl, coherence=coherence)
-        kctl = sel_lib.update_k(state.kctl, global_loss, fl)
+        kctl = sel_lib.update_k(state.kctl, global_loss, fl,
+                                tol=pr.k_tol, patience=pr.k_patience)
 
         new_state = RoundState(new_params, new_server_state, util, kctl,
                                state.round_idx + 1, rng)
@@ -268,55 +293,65 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
 
 
 def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
+                      ckpt_every_steps: int = 2,
                       dp_use_kernel: Optional[bool] = None, grad_accum: int = 1,
                       delta_dtype=None):
-    """Build ``round_step(state, batches) -> (state, metrics)``.
+    """Build ``round_step(state, batches, params=None) -> (state, metrics)``.
 
     batches leaves: [K, local_steps, ...] — data for the K client slots that
     the host-side driver filled with the selected clients' shards (the
     in-step selection produces the slot→client mapping used for weighting).
-    K = fl.serial_clients_in_step is static.
+    K = fl.serial_clients_in_step is static.  ``ckpt_every_steps`` is the
+    same checkpoint interval the parallel plan takes (it used to be
+    hardcoded to 2 here, so a configured interval silently only applied to
+    the parallel plan).  ``params``: runtime :class:`FLParams` as in
+    :func:`make_parallel_round`.
     """
-    server = make_server_optimizer(fl.server_opt, fl.server_lr)
     strategy = sel_lib.get_strategy(fl.selection)
     local_train = _local_train_fn(loss_fn, fl, grad_accum)
     K = fl.serial_clients_in_step
     k_max = int(fl.k_max or n_clients)
-    sigma = (
-        fl.dp_sigma
-        if fl.dp_mode == "paper"
-        else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip)
-    )
+    default_params = fl_params(fl)
 
-    def round_step(state: RoundState, batches) -> Tuple[RoundState, RoundMetrics]:
+    def round_step(state: RoundState, batches,
+                   params: Optional[FLParams] = None
+                   ) -> Tuple[RoundState, RoundMetrics]:
+        pr = default_params if params is None else params
+        server = make_server_optimizer(fl.server_opt, pr.server_lr)
+        sigma = _dp_sigma(fl, pr) if fl.dp_enabled else 0.0
         rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
-        avail = jax.random.bernoulli(k_avail, 0.95, (n_clients,)).astype(jnp.float32)
+        avail = jax.random.bernoulli(k_avail, pr.avail_prob,
+                                     (n_clients,)).astype(jnp.float32)
         utility = sel_lib.compute_utility(state.util, fl)
         k_eff = jnp.minimum(
             state.kctl.k if fl.adaptive_k else float(fl.clients_per_round), float(K)
         )
-        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, min(K, k_max))
+        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff,
+                            min(K, k_max), pr.explore_noise)
         # slot i <- i-th selected client (host driver feeds matching data)
         _, sel_idx = jax.lax.top_k(sel_mask + utility * 1e-6, K)
         slot_live = (jnp.arange(K) < k_eff).astype(jnp.float32)
 
         local_steps = jax.tree.leaves(batches)[0].shape[1]
-        fails = jax.random.bernoulli(k_fail, fl.failure_prob, (K,))
+        fails = jax.random.bernoulli(k_fail, pr.failure_prob, (K,))
         fail_at = jnp.where(
             fails,
             jax.random.randint(jax.random.fold_in(k_fail, 1), (K,), 0, local_steps),
             local_steps,
         )
-        eff_steps, failed = _effective_steps(fail_at, local_steps, 2, fl.fault_tolerance)
+        eff_steps, failed = _effective_steps(fail_at, local_steps,
+                                             ckpt_every_steps,
+                                             fl.fault_tolerance)
 
         def per_client(carry, xs):
             acc, pre_l, post_l, norms, slot = carry
             client_batches, e_steps, live = xs
-            delta, pre, post = local_train(state.params, client_batches, e_steps)
+            delta, pre, post = local_train(state.params, client_batches,
+                                           e_steps, pr.local_lr)
             if fl.dp_enabled:
                 delta, norm = dp_lib.privatize_update(
                     delta, jax.random.fold_in(k_dp, slot),
-                    mode=fl.dp_mode, clip=fl.dp_clip, sigma=sigma,
+                    mode=fl.dp_mode, clip=pr.dp_clip, sigma=sigma,
                     use_kernel=dp_use_kernel,
                 )
             else:
@@ -351,7 +386,8 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         full_pre = jnp.zeros((n_clients,), jnp.float32).at[sel_idx].add(pre_loss * contrib)
         full_post = jnp.zeros((n_clients,), jnp.float32).at[sel_idx].add(post_loss * contrib)
         util = sel_lib.update_utility_state(state.util, full_mask, full_pre, full_post, fl)
-        kctl = sel_lib.update_k(state.kctl, global_loss, fl)
+        kctl = sel_lib.update_k(state.kctl, global_loss, fl,
+                                tol=pr.k_tol, patience=pr.k_patience)
 
         new_state = RoundState(new_params, new_server_state, util, kctl,
                                state.round_idx + 1, rng)

@@ -91,7 +91,10 @@ def compute_utility(state: UtilityState, fl: FLConfig) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Strategies — (key, state, utility, avail_mask, k_eff, k_max) -> mask [n]
+# Strategies — (key, state, utility, avail_mask, k_eff, k_max, explore) ->
+# mask [n].  ``explore`` is the RUNTIME selection temperature (Gumbel noise
+# scale, FLParams.explore_noise): a traced scalar is fine, so temperature
+# sweeps never recompile.
 # ---------------------------------------------------------------------------
 
 
@@ -107,26 +110,28 @@ def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k_eff, k_max: int):
     return mask * (avail > 0)
 
 
-def sel_adaptive_utility(key, state, utility, avail, k_eff, k_max):
+def sel_adaptive_utility(key, state, utility, avail, k_eff, k_max,
+                         explore=0.05):
     """Ours: top-K by utility with ε-greedy exploration noise."""
-    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    noise = explore * jax.random.gumbel(key, utility.shape)
     return _topk_mask(utility + noise, avail, k_eff, k_max)
 
 
-def sel_random(key, state, utility, avail, k_eff, k_max):
+def sel_random(key, state, utility, avail, k_eff, k_max, explore=0.05):
     scores = jax.random.uniform(key, utility.shape)
     return _topk_mask(scores, avail, k_eff, k_max)
 
 
-def sel_acfl(key, state, utility, avail, k_eff, k_max):
+def sel_acfl(key, state, utility, avail, k_eff, k_max, explore=0.05):
     """ACFL-style active selection: uncertainty sampling — prefer clients
     with high loss level & variance (most informative)."""
     uncertainty = state.loss_ema + jnp.sqrt(jnp.maximum(state.loss_var, 0.0))
-    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    noise = explore * jax.random.gumbel(key, utility.shape)
     return _topk_mask(uncertainty + noise, avail, k_eff, k_max)
 
 
-def sel_power_of_choice(key, state, utility, avail, k_eff, k_max):
+def sel_power_of_choice(key, state, utility, avail, k_eff, k_max,
+                        explore=0.05):
     """Power-of-choice: sample d=2·k_max candidates, keep highest-loss K."""
     d = min(2 * k_max, avail.shape[0])
     cand = _topk_mask(jax.random.uniform(key, utility.shape), avail, d, d)
@@ -134,12 +139,12 @@ def sel_power_of_choice(key, state, utility, avail, k_eff, k_max):
     return _topk_mask(scores, avail, k_eff, k_max)
 
 
-def sel_adafl(key, state, utility, avail, k_eff, k_max):
+def sel_adafl(key, state, utility, avail, k_eff, k_max, explore=0.05):
     """AdaFL: current + historical contribution, no cost/staleness terms."""
     hist = state.perf_ema + 0.1 * state.participation / jnp.maximum(
         jnp.max(state.participation), 1.0
     )
-    noise = 0.05 * jax.random.gumbel(key, utility.shape)
+    noise = explore * jax.random.gumbel(key, utility.shape)
     return _topk_mask(hist + noise, avail, k_eff, k_max)
 
 
@@ -180,9 +185,15 @@ def init_k_state(fl: FLConfig) -> KControllerState:
 
 
 def update_k(state: KControllerState, global_loss, fl: FLConfig,
-             tol: float = 1e-3, patience: float = 3.0) -> KControllerState:
+             tol=None, patience=None) -> KControllerState:
     """Grow K on plateau (need more signal), shrink while improving fast
-    (save Cost(S_t)); clamp to [k_min, k_max]."""
+    (save Cost(S_t)); clamp to [k_min, k_max].
+
+    ``tol``/``patience`` default to the config's ``k_tol``/``k_patience``;
+    the engine passes its runtime FLParams values instead (traced scalars are
+    fine — threshold sweeps share one compiled program)."""
+    tol = fl.k_tol if tol is None else tol
+    patience = fl.k_patience if patience is None else patience
     k_max = float(fl.k_max or fl.n_clients)
     improved = global_loss < state.best_metric * (1.0 - tol)
     plateau = jnp.where(improved, 0.0, state.plateau + 1.0)

@@ -58,6 +58,12 @@ def dp_clip_noise_tree(tree, key, clip: float, sigma: float, *,
     both paths produce bit-identical noise).  Pass ``interpret=True`` to
     force interpret-mode Pallas (kernel validation on CPU).
 
+    ``clip``/``sigma`` may be traced scalars (runtime FLParams — the engine
+    sweeps them without recompiling).  The Pallas kernel bakes ``sigma`` as
+    a compile-time constant, so a traced sigma is folded into the noise
+    operand instead (``x·scale + 1.0·(σ·n)`` — same f32 product, one extra
+    elementwise multiply outside the fused pass).
+
     Returns (noised_tree, pre_clip_global_norm)."""
     if interpret is None:
         if not pallas_backend_ready():
@@ -69,12 +75,16 @@ def dp_clip_noise_tree(tree, key, clip: float, sigma: float, *,
     )
     norm = jnp.sqrt(total)
     scale = jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12))
+    sigma_static = isinstance(sigma, (int, float))
     keys = jax.random.split(key, len(leaves))
     out = []
     for leaf, k in zip(leaves, keys):
         noise = jax.random.normal(k, leaf.shape, jnp.float32)
+        if not sigma_static:
+            noise = sigma * noise
         out.append(
-            _dp.scale_noise(leaf, noise, scale, sigma=float(sigma),
+            _dp.scale_noise(leaf, noise, scale,
+                            sigma=float(sigma) if sigma_static else 1.0,
                             interpret=interpret)
         )
     return jax.tree.unflatten(treedef, out), norm

@@ -16,16 +16,20 @@ Methods:
 
 Execution engines (docs/ARCHITECTURE.md):
 
-* :func:`run_fl` / :func:`run_fl_batch` — the COMPILED engine.  The whole
-  round loop is one ``jax.lax.scan`` (batch sampling, round step, time
-  model and eval all lowered); ``run_fl_batch`` additionally ``jax.vmap``s
-  the scanned loop over a seed axis, so one compiled program produces every
-  repeated trial of a (method, dataset) cell.  There is no host sync until
-  the final history readback.
+* :func:`run_fl_sweep` — the COMPILED sweep engine.  The whole round loop
+  is one ``jax.lax.scan`` (batch sampling, round step, time model and eval
+  all lowered), ``jax.vmap``-ed over a **seed×config lane axis**: every
+  scalar hyper-parameter (``FLParams``) is a runtime array, so an entire
+  ε/failure/lr grid × repeated trials runs as ONE program, compiled once
+  per (method statics, shapes) and sharded over the available devices.
+  There is no host sync until the final history readback.
+* :func:`run_fl` / :func:`run_fl_batch` — single-cell front doors of the
+  same engine (a sweep of one config; a batch of one seed).
 * :func:`run_fl_legacy` — the original per-round Python loop, kept as the
   semantic oracle: tests/test_engine.py checks the scanned engine against
   it, and benchmarks/bench_engine.py records the old-vs-new rounds/sec
-  comparison in BENCH_engine.json.
+  comparison in BENCH_engine.json; BENCH_sweep.json records the
+  sweep-vs-per-cell comparison (benchmarks/bench_sweep.py).
 
 Time model (the container has one CPU; the paper measured a GPU workstation):
 simulated round time = slowest selected client's local compute
@@ -47,9 +51,11 @@ from typing import Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.configs.base import FLConfig
+from repro.configs.base import (FLConfig, FLParams, fl_params, fl_static)
 from repro.core import dp as dp_lib
+from repro.core import fault as fault_lib
 from repro.core import rounds as rounds_lib
 from repro.data.synthetic import (FederatedData, StackedFederation,
                                   round_batches, sample_round_batches,
@@ -131,13 +137,17 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
                         base_step_time: float = 0.02,
                         comm_time: float = 0.35,
                         ckpt_write: float = 0.08,
-                        param_kb: float = 64.0) -> jnp.ndarray:
+                        param_kb: float = 64.0,
+                        params: Optional[FLParams] = None) -> jnp.ndarray:
     """Paper-faithful wall-time model for one round (see module docstring).
 
     Pure ``jnp`` — jit-safe, so the cumulative simulated time is carried
     through the ``lax.scan`` state instead of syncing to NumPy every round.
-    Branching on FLConfig fields is fine: the config is trace-time static.
+    Branching on the STATIC FLConfig fields (dp_enabled, fault_tolerance)
+    is fine; the recovery term reads the runtime ``params`` (defaulting to
+    the config's values), so failure-model sweeps share one program.
     """
+    pr = fl_params(fl) if params is None else params
     sel = sel_mask > 0
     any_sel = jnp.any(sel)
     steps = fl.local_epochs
@@ -149,7 +159,7 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
     n_failed_sel = jnp.sum(jnp.where(sel, failed, 0.0))
     if fl.fault_tolerance:
         t = t + ckpt_write * max(1, steps // 2)
-        t = t + n_failed_sel * (fl.recovery_time * 0.01)
+        t = t + n_failed_sel * fault_lib.recovery_overhead(pr.recovery_time)
     else:
         # failed clients redo the whole round next time: amortised penalty
         t = t + n_failed_sel * slowest
@@ -172,7 +182,7 @@ def spent_epsilon(fl: FLConfig, rounds: int) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Compiled engine: lax.scan over rounds, vmap over seeds
+# Compiled engine: lax.scan over rounds, vmap over seed×config lanes
 # ---------------------------------------------------------------------------
 
 
@@ -184,9 +194,14 @@ def _eval_rounds(rounds: int, eval_every: int) -> List[int]:
 
 def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
                       n_classes: int):
-    """``single_run(key, stack, data_size, data_quality) -> (final_params,
-    sim_time, eval trace)``, a pure function of the seed key and the
-    (runtime-argument) federation.
+    """``single_run(key, stack, data_size, data_quality, params) ->
+    (final_params, sim_time, eval trace)``, a pure function of the seed key,
+    the (runtime-argument) federation and the runtime :class:`FLParams`.
+
+    ``fl`` here is the STATIC config (the caller canonicalises with
+    ``fl_static``): every scalar hyper-parameter the round step consumes
+    comes from ``params``, so vmapping this function over stacked FLParams
+    lanes sweeps a whole hyper-parameter grid inside one program.
 
     Structure: a NESTED scan.  The inner ``lax.scan`` advances ``eval_every``
     rounds carrying (RoundState, data key, cumulative simulated time); the
@@ -198,7 +213,8 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     """
     n_full, rem = divmod(rounds, eval_every)
 
-    def single_run(key, stack: StackedFederation, data_size, data_quality):
+    def single_run(key, stack: StackedFederation, data_size, data_quality,
+                   pr: FLParams):
         n_clients = stack.n_clients
         n_features = stack.x.shape[-1]
         round_step = rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl,
@@ -210,9 +226,10 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
             data_key, k_batch = jax.random.split(data_key)
             batches = sample_round_batches(k_batch, stack, fl.local_epochs,
                                            fl.local_batch)
-            state, m = round_step(state, batches)
+            state, m = round_step(state, batches, pr)
             cum_time = cum_time + simulate_round_time(fl, state.util,
-                                                      m.sel_mask, m.failed)
+                                                      m.sel_mask, m.failed,
+                                                      params=pr)
             return (state, data_key, cum_time), (m.global_loss, m.k_effective)
 
         def eval_block(carry, block_len):
@@ -253,11 +270,14 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     return single_run
 
 
-# Compiled runners keyed on (FLConfig, rounds, eval_every, hidden, n_classes,
-# n_seeds, stack shapes): the federation is a runtime pytree argument, so one
-# program serves every same-shaped federation and every repeated call — a
-# sweep compiles each cell once, then runs at device speed.
+# Compiled runners keyed on (STATIC config, rounds, eval_every, hidden,
+# n_classes, n_lanes, stack shapes): the federation AND every scalar
+# hyper-parameter (FLParams) are runtime arguments, so ONE program serves an
+# entire ε/failure/lr grid — one compile per (method-statics, shapes) cell,
+# not per grid point.  RUNNER_STATS counts misses/hits so tests and
+# benchmarks can assert the single-compile property.
 _RUNNER_CACHE: Dict = {}
+RUNNER_STATS = {"misses": 0, "hits": 0}
 
 # Device-side federations cached per host FederatedData object, so repeat
 # calls (seed loops, epsilon sweeps) skip the O(n_clients × max_n × d)
@@ -281,16 +301,171 @@ def _device_federation(fed: FederatedData):
 
 
 def _get_runner(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
-                n_classes: int, n_seeds: int, stack: StackedFederation):
-    cache_key = (fl, rounds, eval_every, hidden, n_classes, n_seeds,
+                n_classes: int, n_lanes: int, stack: StackedFederation):
+    """Compiled ``runner(keys[L], stack, data_size, data_quality,
+    params_lanes[L]) -> (params[L], sim_time[L], trace[L])``.
+
+    Keyed on the STATIC config only: two configs that differ in runtime
+    knobs (ε, failure prob, lrs, ...) resolve to the same cache entry and
+    the same XLA program.  Off-CPU, the per-lane inputs (keys + FLParams)
+    are donated — they are rebuilt per call, so XLA may alias them into the
+    scan carry instead of holding both live.
+    """
+    static = fl_static(fl)
+    cache_key = (static, rounds, eval_every, hidden, n_classes, n_lanes,
                  stack.shapes())
     runner = _RUNNER_CACHE.get(cache_key)
     if runner is None:
-        single_run = _build_single_run(fl, rounds, eval_every, hidden,
+        RUNNER_STATS["misses"] += 1
+        single_run = _build_single_run(static, rounds, eval_every, hidden,
                                        n_classes)
-        runner = jax.jit(jax.vmap(single_run, in_axes=(0, None, None, None)))
+        donate = () if jax.default_backend() == "cpu" else (0, 4)
+        runner = jax.jit(
+            jax.vmap(single_run, in_axes=(0, None, None, None, 0)),
+            donate_argnums=donate,
+        )
         _RUNNER_CACHE[cache_key] = runner
+    else:
+        RUNNER_STATS["hits"] += 1
     return runner
+
+
+def _lane_sharding(n_lanes: int):
+    """(n_devices, lane_sharding, replicated_sharding) over a 1-D device
+    mesh, or ``None`` on a single device.  The caller pads the lane axis up
+    to a multiple of ``n_devices`` (duplicating trailing lanes, dropped on
+    readback) so every device carries whole lanes — a 17-lane sweep on 16
+    devices runs two waves instead of falling back to one device."""
+    devices = jax.devices()
+    n = min(len(devices), n_lanes)
+    if n <= 1:
+        return None
+    mesh = jax.sharding.Mesh(np.asarray(devices[:n]), ("lane",))
+    return (n, NamedSharding(mesh, PartitionSpec("lane")),
+            NamedSharding(mesh, PartitionSpec()))
+
+
+def _params_lanes(cells: Sequence[FLConfig], n_seeds: int) -> FLParams:
+    """Stack each cell's runtime params into [n_cells·n_seeds] f32 lanes
+    (cell-major: lane = cell_index * n_seeds + seed_index)."""
+    per_cell = [fl_params(c) for c in cells]
+    return jax.tree.map(
+        lambda *xs: jnp.repeat(jnp.asarray(xs, jnp.float32), n_seeds),
+        *per_cell)
+
+
+def run_fl_sweep(
+    fed: FederatedData,
+    fl: FLConfig,
+    params_grid: Sequence,
+    seeds: Sequence[int] = (0, 1, 2, 3),
+    method: str = "proposed",
+    rounds: Optional[int] = None,
+    eval_every: int = 10,
+    dataset: str = "unsw",
+    hidden: int = 64,
+) -> List[List[RunResult]]:
+    """An entire hyper-parameter sweep as ONE compiled program.
+
+    ``params_grid``: one entry per sweep cell — an :class:`FLConfig` sharing
+    ``fl``'s statics, a dict of runtime-field overrides applied to ``fl``
+    (e.g. ``{"dp_epsilon": 0.1}``), or an :class:`FLParams`.  The engine
+    stacks every cell's runtime scalars into a **seed×config lane axis**
+    (``len(params_grid) · len(seeds)`` lanes), vmaps the scanned round loop
+    over it, and shards the lane axis across the available devices
+    (``NamedSharding`` over a 1-D ``lane`` mesh — on one device the program
+    is identical, on N devices each carries ``lanes/N`` trials).
+
+    One ``_get_runner`` miss covers the WHOLE grid (the cache keys on
+    statics + shapes, not cell values): a Fig.-3 ε column or a Table-II
+    failure sweep compiles once and then runs every cell·seed lane in a
+    single device program.  Lane semantics match the per-cell engine —
+    ``run_fl_sweep(..., [cfg_a, cfg_b], seeds)[i][j]`` equals
+    ``run_fl(fed, cfg_i, seed=seeds[j])`` lane for lane (tested in
+    tests/test_sweep.py).
+
+    Returns results indexed ``[cell][seed]``.
+    """
+    fl = fl_for_method(fl, method)
+    rounds = int(rounds or fl.rounds)
+    seeds = [int(s) for s in seeds]
+    cells: List[FLConfig] = []
+    for p in params_grid:
+        if isinstance(p, FLConfig):
+            cell = fl_for_method(p, method)
+        elif isinstance(p, FLParams):
+            cell = dataclasses.replace(fl, **p._asdict())
+        else:
+            cell = dataclasses.replace(fl, **dict(p))
+        if fl_static(cell) != fl_static(fl):
+            raise ValueError(
+                "params_grid cell differs from the base config in a STATIC "
+                "field — those gate code structure and cannot ride the "
+                f"runtime lane axis: {cell}")
+        cells.append(cell)
+    if not cells:
+        return []
+
+    n_lanes = len(cells) * len(seeds)
+    sharding = _lane_sharding(n_lanes)
+    n_padded = n_lanes
+    if sharding is not None:
+        n_padded = -(-n_lanes // sharding[0]) * sharding[0]
+
+    t0 = time.time()
+    stack, data_size, data_quality = _device_federation(fed)
+    runner = _get_runner(fl, rounds, eval_every, hidden, fed.n_classes,
+                         n_padded, stack)
+    keys = jax.vmap(jax.random.key)(
+        jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
+    lanes = _params_lanes(cells, len(seeds))
+    if n_padded > n_lanes:
+        pad = n_padded - n_lanes
+        keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, axis=0)])
+        lanes = jax.tree.map(
+            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+            lanes)
+
+    if sharding is not None:
+        _, s_lane, s_rep = sharding
+        keys = jax.device_put(keys, s_lane)
+        lanes = jax.tree.map(lambda x: jax.device_put(x, s_lane), lanes)
+        stack, data_size, data_quality = jax.tree.map(
+            lambda x: jax.device_put(x, s_rep),
+            (stack, data_size, data_quality))
+
+    params_b, sim_b, trace_b = runner(keys, stack, data_size, data_quality,
+                                      lanes)
+    jax.block_until_ready(sim_b)
+    wall_per_lane = (time.time() - t0) / max(n_lanes, 1)
+
+    eval_idx = _eval_rounds(rounds, eval_every)
+    trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
+    sim_np = np.asarray(sim_b)
+    out: List[List[RunResult]] = []
+    for ci, cell in enumerate(cells):
+        eps = spent_epsilon(cell, rounds)
+        row = []
+        for si, seed in enumerate(seeds):
+            lane = ci * len(seeds) + si
+            history = {"round": [r + 1 for r in eval_idx]}
+            for name in ("loss", "acc", "auc", "k", "cum_time"):
+                history[name] = [float(x) for x in trace_np[name][lane]]
+            sim_time = float(sim_np[lane])
+            acc, auc = history["acc"][-1], history["auc"][-1]
+            if method == "fedl2p":
+                # personalisation pass (the point of FedL2P) + simulated cost
+                acc, auc = _personalize(
+                    jax.tree.map(lambda x: x[lane], params_b), fed, seed=seed)
+                sim_time *= 1.2
+            row.append(RunResult(
+                method=method, dataset=dataset, seed=seed,
+                accuracy=acc, auc=auc,
+                sim_time_s=sim_time, wall_time_s=wall_per_lane,
+                rounds=rounds, eps_spent=eps, history=history,
+            ))
+        out.append(row)
+    return out
 
 
 def run_fl_batch(
@@ -304,7 +479,7 @@ def run_fl_batch(
     hidden: int = 64,
 ) -> List[RunResult]:
     """All repeated trials of one (method, dataset) cell as ONE compiled
-    program: ``vmap`` over the seed axis of the scanned round loop.
+    program: a single-cell :func:`run_fl_sweep` (vmap over the seed lanes).
 
     Per-seed results are bit-for-bit the batched lanes of the single-seed
     scanned engine (each lane keys off ``jax.random.key(seed)``), so
@@ -312,40 +487,9 @@ def run_fl_batch(
     at a fraction of the dispatch cost.  ``wall_time_s`` on each result is
     the batch wall time amortised over the seeds.
     """
-    fl = fl_for_method(fl, method)
-    rounds = int(rounds or fl.rounds)
-    seeds = [int(s) for s in seeds]
-    t0 = time.time()
-    stack, data_size, data_quality = _device_federation(fed)
-    runner = _get_runner(fl, rounds, eval_every, hidden, fed.n_classes,
-                         len(seeds), stack)
-    keys = jax.vmap(jax.random.key)(jnp.asarray(seeds, jnp.uint32))
-    params_b, sim_b, trace_b = runner(keys, stack, data_size, data_quality)
-    jax.block_until_ready(sim_b)
-    wall_per_seed = (time.time() - t0) / max(len(seeds), 1)
-
-    eps = spent_epsilon(fl, rounds)
-    eval_idx = _eval_rounds(rounds, eval_every)
-    trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
-    results = []
-    for i, seed in enumerate(seeds):
-        history = {"round": [r + 1 for r in eval_idx]}
-        for name in ("loss", "acc", "auc", "k", "cum_time"):
-            history[name] = [float(x) for x in trace_np[name][i]]
-        sim_time = float(sim_b[i])
-        acc, auc = history["acc"][-1], history["auc"][-1]
-        if method == "fedl2p":
-            # personalisation pass (the point of FedL2P) + its simulated cost
-            acc, auc = _personalize(jax.tree.map(lambda x: x[i], params_b),
-                                    fed, seed=seed)
-            sim_time *= 1.2
-        results.append(RunResult(
-            method=method, dataset=dataset, seed=seed,
-            accuracy=acc, auc=auc,
-            sim_time_s=sim_time, wall_time_s=wall_per_seed,
-            rounds=rounds, eps_spent=eps, history=history,
-        ))
-    return results
+    return run_fl_sweep(fed, fl, [fl], seeds=seeds, method=method,
+                        rounds=rounds, eval_every=eval_every, dataset=dataset,
+                        hidden=hidden)[0]
 
 
 def run_fl(

@@ -1,0 +1,248 @@
+"""Sweep-engine tests (ISSUE 2): the seed×config lane axis must be a
+drop-in replacement for running grid cells one at a time.
+
+* ``run_fl_sweep`` over a stacked ε grid matches per-cell ``run_fl`` lane
+  for lane — same seeds, same eval history, same reported ε;
+* the compiled-runner cache keys on STATICS + shapes: one ``_get_runner``
+  miss per shape, zero new misses when only runtime knobs change;
+* static-field mismatches inside a grid are rejected loudly;
+* ``make_serial_round`` honours ``ckpt_every_steps`` (it used to hardcode 2);
+* the lane axis shards over a multi-device mesh without changing results
+  (subprocess with XLA_FLAGS-faked CPU devices).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (FLConfig, FLParams, fl_params, fl_static)
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import make_federated, round_batches
+from repro.models import mlp as mlp_lib
+from repro.train import fl_driver
+
+ROUNDS = 12
+EVAL_EVERY = 5
+SEEDS = (0, 2)
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_federated(0, "unsw", n_samples=1_500, n_clients=8)
+
+
+@pytest.fixture(scope="module")
+def fl():
+    return FLConfig(n_clients=8, clients_per_round=3, rounds=ROUNDS,
+                    local_epochs=2, local_batch=16, local_lr=0.08,
+                    dp_enabled=True, dp_mode="clipped", dp_epsilon=200.0,
+                    dp_clip=5.0, fault_tolerance=True, failure_prob=0.05)
+
+
+# ---------------------------------------------------------------------------
+# static/runtime split
+# ---------------------------------------------------------------------------
+
+
+def test_fl_static_collapses_runtime_fields(fl):
+    a = dataclasses.replace(fl, dp_epsilon=0.1, failure_prob=0.4,
+                            local_lr=0.01, server_lr=0.5, explore_noise=0.2)
+    assert fl_static(a) == fl_static(fl)
+    b = dataclasses.replace(fl, selection="random")  # static: new program
+    assert fl_static(b) != fl_static(fl)
+
+
+def test_fl_params_mirrors_config(fl):
+    pr = fl_params(dataclasses.replace(fl, dp_epsilon=3.5, k_patience=7.0))
+    assert pr.dp_epsilon == 3.5
+    assert pr.k_patience == 7.0
+    # FLParams is a flat pytree of scalars — vmappable lane material
+    leaves = jax.tree.leaves(pr)
+    assert len(leaves) == len(FLParams._fields)
+
+
+# ---------------------------------------------------------------------------
+# sweep vs per-cell equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_matches_per_cell_lane_for_lane(fed, fl):
+    """A stacked ε grid must reproduce per-cell ``run_fl`` exactly (same
+    seeds, same eval history, same reported ε) — the sweep lane axis is pure
+    throughput, never semantics."""
+    epsilons = (50.0, 200.0, 1000.0)
+    cells = [dataclasses.replace(fl, dp_epsilon=e) for e in epsilons]
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
+    assert len(sweep) == len(cells) and all(len(r) == len(SEEDS) for r in sweep)
+    for cell, row in zip(cells, sweep):
+        for seed, lane in zip(SEEDS, row):
+            single = fl_driver.run_fl(fed, cell, "proposed", seed=seed,
+                                      rounds=ROUNDS, eval_every=EVAL_EVERY)
+            assert lane.seed == seed
+            assert lane.eps_spent == single.eps_spent
+            assert lane.history["round"] == single.history["round"]
+            np.testing.assert_allclose(lane.accuracy, single.accuracy,
+                                       atol=1e-5)
+            np.testing.assert_allclose(lane.history["acc"],
+                                       single.history["acc"], atol=1e-5)
+            np.testing.assert_allclose(lane.history["cum_time"],
+                                       single.history["cum_time"], rtol=1e-5)
+    # ε must actually differ across cells (the grid is real, not broadcast)
+    eps = [row[0].eps_spent for row in sweep]
+    assert eps == sorted(eps) and len(set(eps)) == len(cells)
+
+
+def test_one_compile_per_shape_not_per_cell(fed, fl):
+    """The whole point of the runtime-parameter engine: a grid compiles
+    once.  New runtime values -> cache hit; new lane count or statics ->
+    miss."""
+    epsilons = (60.0, 120.0, 240.0, 480.0)
+    cells = [dataclasses.replace(fl, dp_epsilon=e) for e in epsilons]
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS, rounds=ROUNDS,
+                           eval_every=EVAL_EVERY)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 <= 1  # one program, whole grid
+
+    # per-cell batches with DIFFERENT runtime values reuse one program too
+    fl_driver.run_fl_batch(fed, cells[0], seeds=SEEDS, rounds=ROUNDS,
+                           eval_every=EVAL_EVERY)
+    m1 = fl_driver.RUNNER_STATS["misses"]
+    for cell in cells[1:]:
+        fl_driver.run_fl_batch(fed, cell, seeds=SEEDS, rounds=ROUNDS,
+                               eval_every=EVAL_EVERY)
+    assert fl_driver.RUNNER_STATS["misses"] == m1, \
+        "runtime-only config change must not recompile"
+
+    # a STATIC change does compile a new program
+    fl_driver.run_fl_batch(fed, dataclasses.replace(fl, selection="random"),
+                           method="random", seeds=SEEDS, rounds=ROUNDS,
+                           eval_every=EVAL_EVERY)
+    assert fl_driver.RUNNER_STATS["misses"] == m1 + 1
+
+
+def test_sweep_rejects_static_mismatch(fed, fl):
+    # dp_mode gates code structure (and survives fl_for_method, which owns
+    # the selection field) — it cannot ride the runtime lane axis
+    bad = dataclasses.replace(fl, dp_mode="paper")
+    with pytest.raises(ValueError, match="STATIC"):
+        fl_driver.run_fl_sweep(fed, fl, [fl, bad], seeds=(0,), rounds=4)
+
+
+def test_sweep_accepts_dict_and_flparams_cells(fed, fl):
+    grid = [{"dp_epsilon": 80.0},
+            fl_params(dataclasses.replace(fl, dp_epsilon=80.0))]
+    res = fl_driver.run_fl_sweep(fed, fl, grid, seeds=(0,), rounds=6,
+                                 eval_every=3)
+    # both spellings denote the same cell -> identical lanes
+    assert res[0][0].eps_spent == res[1][0].eps_spent
+    np.testing.assert_allclose(res[0][0].accuracy, res[1][0].accuracy,
+                               atol=1e-6)
+
+
+def test_runtime_params_change_results(fed, fl):
+    """The runtime lane values must actually reach the math: crank the DP
+    noise (tiny ε) and training must degrade relative to near-noiseless."""
+    cells = [dataclasses.replace(fl, dp_epsilon=0.05),
+             dataclasses.replace(fl, dp_epsilon=5000.0)]
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=(0, 1, 2),
+                                   rounds=ROUNDS, eval_every=ROUNDS)
+    # same seed, different ε lane -> the trajectories MUST diverge (guards
+    # against a regression that silently drops the runtime value)
+    for lane_noisy, lane_clean in zip(sweep[0], sweep[1]):
+        assert lane_noisy.history["loss"] != lane_clean.history["loss"]
+    noisy = np.mean([r.accuracy for r in sweep[0]])
+    clean = np.mean([r.accuracy for r in sweep[1]])
+    assert clean > noisy - 0.02, (clean, noisy)
+    # ...and the selection temperature reaches the strategy: an absurd
+    # temperature makes selection ~random, changing the trajectory
+    hot = fl_driver.run_fl_sweep(fed, fl, [{"explore_noise": 50.0}],
+                                 seeds=(0,), rounds=ROUNDS,
+                                 eval_every=ROUNDS)[0][0]
+    cold = fl_driver.run_fl_sweep(fed, fl, [{"explore_noise": 0.0}],
+                                  seeds=(0,), rounds=ROUNDS,
+                                  eval_every=ROUNDS)[0][0]
+    assert hot.history["loss"] != cold.history["loss"]
+
+
+# ---------------------------------------------------------------------------
+# serial plan: ckpt_every_steps is configurable (was hardcoded to 2)
+# ---------------------------------------------------------------------------
+
+
+def test_serial_round_respects_ckpt_every(fed):
+    """With p_fail=1 and ckpt interval == local_steps, every failing client
+    loses ALL work (no checkpoint before the failure step) -> params frozen;
+    with interval 1 the failure step itself is the checkpoint -> progress.
+    The old hardcoded interval of 2 made both behave alike."""
+    def run(ckpt_every):
+        flc = FLConfig(n_clients=6, clients_per_round=4, adaptive_k=False,
+                       local_epochs=1, local_batch=16, local_lr=0.1,
+                       dp_enabled=False, fault_tolerance=True,
+                       failure_prob=1.0, serial_clients_in_step=3)
+        params = mlp_lib.init_mlp(jax.random.key(0), fed.n_features, 16, 2)
+        state = rounds_lib.init_round_state(params, flc, jax.random.key(1),
+                                            n_clients=6)
+        step = jax.jit(rounds_lib.make_serial_round(
+            mlp_lib.mlp_loss, flc, 6, ckpt_every_steps=ckpt_every))
+        rng = np.random.default_rng(0)
+        b = jax.tree.map(jnp.asarray, round_batches(rng, fed, 4, 16))
+        state, _ = step(state, jax.tree.map(lambda x: x[:3], b))
+        return state.params
+
+    p0 = mlp_lib.init_mlp(jax.random.key(0), fed.n_features, 16, 2)
+    frozen = run(ckpt_every=4)     # kept = (fail//4)*4 = 0 for fail in [0,4)
+    for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(p0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    moved = run(ckpt_every=1)      # kept = fail step itself
+    assert any(bool(jnp.any(a != b)) for a, b in
+               zip(jax.tree.leaves(moved), jax.tree.leaves(p0)))
+
+
+# ---------------------------------------------------------------------------
+# mesh sharding of the lane axis
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import dataclasses, jax, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.train import fl_driver
+
+fed = make_federated(0, "unsw", n_samples=800, n_clients=6)
+fl = FLConfig(n_clients=6, clients_per_round=3, rounds=6, local_epochs=2,
+              local_batch=16, dp_enabled=True, dp_mode="clipped",
+              dp_epsilon=300.0, dp_clip=5.0, fault_tolerance=True)
+cells = [dataclasses.replace(fl, dp_epsilon=e) for e in (100.0, 300.0)]
+sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=(0, 1), rounds=6,
+                               eval_every=3)   # 4 lanes over 4 devices
+ref = fl_driver.run_fl(fed, cells[0], seed=1, rounds=6, eval_every=3)
+np.testing.assert_allclose(sweep[0][1].accuracy, ref.accuracy, atol=1e-5)
+np.testing.assert_allclose(sweep[0][1].history["acc"], ref.history["acc"],
+                           atol=1e-5)
+assert all(np.isfinite(r.sim_time_s) for row in sweep for r in row)
+print("SHARDED_SWEEP_OK")
+"""
+
+
+def test_lane_axis_shards_over_device_mesh(tmp_path):
+    """4 lanes over 4 (XLA-faked) CPU devices: the NamedSharding path must
+    produce the same per-lane results as the single-device engine.  Runs in
+    a subprocess because the device count must be set before jax init."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_SWEEP_OK" in out.stdout
