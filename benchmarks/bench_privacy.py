@@ -1,0 +1,203 @@
+"""Privacy-subsystem benchmark (ISSUE 3): the compiled budget frontier.
+
+Sections, written to ``BENCH_privacy.json`` at the repo root:
+
+* ``frontier`` — the ε-vs-AUC frontier: ≥4 TOTAL privacy budgets × ≥4
+  seeds with **adaptive** budget scheduling, all lanes in ONE compiled
+  program (``dp_budget``/``dp_sched`` are runtime FLParams lanes).  Hard
+  assertion: exactly one ``_get_runner`` miss for the whole grid.
+* ``overhead`` — the in-scan accountant + scheduler cost vs the PR 2
+  engine: the same (shape, statics) cell with ``dp_scheduled`` off vs on.
+  Timing protocol (repo memory: very noisy wall clocks): both sides are
+  warm MIN-OF-N executes — a cold wall never enters the ratio.
+  Acceptance: ratio ≤ 1.05 (the accountant is ~30 scalar flops/round next
+  to a 24-client training step; exit code gates only when run standalone
+  in full mode).
+* ``offline_check`` — hard assertion: a uniform-schedule, fixed-K lane's
+  final accounted ε (the f32 in-scan accountant) matches the f64
+  closed-form RDP composition at the engine's own σ within 1e-6
+  (relative) — the acceptance bound, re-verified on every run.
+
+``REPRO_PRIVACY_SMOKE=1`` shrinks the grid (2 budgets × 2 seeds × few
+rounds) and skips the wall-clock gate — correctness assertions stay on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.privacy import accountant as acct_lib
+from repro.privacy import schedule as sched_lib
+from repro.train import fl_driver
+
+from benchmarks import common
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_privacy.json")
+
+SMOKE = os.environ.get("REPRO_PRIVACY_SMOKE", "0") == "1"
+N_CLIENTS = 8 if SMOKE else 24
+N_SAMPLES = 1_200 if SMOKE else 6_000
+ROUNDS = 10 if SMOKE else 60
+SEEDS = (0, 1) if SMOKE else (0, 1, 2, 3)
+BUDGETS = (300.0, 3000.0) if SMOKE else (300.0, 1000.0, 3000.0, 10000.0)
+EVAL_EVERY = 5 if SMOKE else 10
+WARM_N = 3 if SMOKE else 5
+
+
+def _bench_config(**kw) -> FLConfig:
+    return FLConfig(
+        n_clients=N_CLIENTS, clients_per_round=4, rounds=ROUNDS,
+        local_epochs=5, local_batch=32, local_lr=0.08,
+        dp_enabled=True, dp_mode="clipped", dp_epsilon=1000.0, dp_clip=1.0,
+        fault_tolerance=True, failure_prob=0.05, **kw)
+
+
+def run(csv_rows: list) -> dict:
+    mode = "smoke" if SMOKE else "full"
+    print(f"\n== Privacy: budget frontier + accountant overhead ({mode}) ==")
+    fed = make_federated(0, "unsw", n_samples=N_SAMPLES, n_clients=N_CLIENTS)
+
+    # ---- frontier: adaptive scheduling, one compiled program ----
+    fl = _bench_config(dp_scheduled=True,
+                      dp_sched=sched_lib.schedule_code("adaptive"))
+    cells = [{"dp_budget": b} for b in BUDGETS]
+    fl_driver._RUNNER_CACHE.clear()
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    t0 = time.time()
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
+    t_frontier_cold = time.time() - t0
+    misses = fl_driver.RUNNER_STATS["misses"] - m0
+    assert misses == 1, (
+        f"the whole budget frontier must compile exactly one runner, got "
+        f"{misses}")
+
+    frontier = []
+    for budget, row in zip(BUDGETS, sweep):
+        frontier.append({
+            "budget": budget,
+            "auc_mean": float(np.mean([r.auc for r in row])),
+            "acc_mean": float(np.mean([r.accuracy for r in row])),
+            "eps_spent_mean": float(np.mean([r.eps_spent for r in row])),
+            "sigma_first": row[0].history["sigma"][0],
+            "sigma_last": row[0].history["sigma"][-1],
+            "live_frac_last": float(np.mean(
+                [r.history["live"][-1] for r in row])),
+        })
+        assert all(r.eps_spent <= budget * (1 + 1e-5) for r in row), \
+            "accounted ε overshot the lane's budget"
+
+    # ---- overhead: scheduled vs PR 2 fixed-σ engine, warm min-of-N ----
+    base = _bench_config()           # dp_scheduled=False — the PR 2 path
+    sched = _bench_config(dp_scheduled=True)
+
+    def run_base():
+        fl_driver.run_fl_batch(fed, base, "proposed", seeds=SEEDS,
+                               rounds=ROUNDS, eval_every=EVAL_EVERY)
+
+    def run_sched():
+        fl_driver.run_fl_batch(fed, sched, "proposed", seeds=SEEDS,
+                               rounds=ROUNDS, eval_every=EVAL_EVERY)
+
+    run_base()    # compile both programs before any timed call
+    run_sched()
+    t_base, base_walls = common.warm_min(run_base, WARM_N)
+    t_sched, sched_walls = common.warm_min(run_sched, WARM_N)
+    overhead = t_sched / t_base
+    gate = bool(overhead <= 1.05)
+
+    # ---- offline check: in-scan ε == f64 composition at the engine's σ ----
+    fixed = _bench_config(dp_scheduled=True, adaptive_k=False)
+    res = fl_driver.run_fl_batch(fed, fixed, "proposed", seeds=(0,),
+                                 rounds=ROUNDS, eval_every=EVAL_EVERY)[0]
+    # compose offline over the rounds the engine actually RELEASED — the
+    # calibration converges z to the budget threshold with sub-ulp margin,
+    # so the very last round may legitimately land a ulp over and be gated;
+    # anything more than that would be a real calibration bug.
+    block_lens = [EVAL_EVERY] * (ROUNDS // EVAL_EVERY)
+    if ROUNDS % EVAL_EVERY:
+        block_lens.append(ROUNDS % EVAL_EVERY)
+    released = int(round(sum(f * b for f, b in
+                             zip(res.history["live"], block_lens))))
+    assert released >= ROUNDS - 1, (
+        f"uniform calibration released only {released}/{ROUNDS} rounds")
+    z_engine = float(np.float32(res.history["sigma"][0])) / fixed.dp_clip
+    q = float(np.float32(fixed.clients_per_round / fixed.n_clients))
+    eps_offline = acct_lib.compose_epsilon(z_engine, q, released,
+                                           fixed.dp_delta)
+    eps_err = abs(res.eps_spent - eps_offline) / max(1.0, abs(eps_offline))
+    assert eps_err <= 1e-6, (
+        f"in-scan accountant drifted from the offline RDP reference: "
+        f"{res.eps_spent} vs {eps_offline} (rel {eps_err:.2e})")
+
+    n_lanes = len(BUDGETS) * len(SEEDS)
+    report = {
+        "mode": mode,
+        "config": {"n_clients": N_CLIENTS, "rounds": ROUNDS,
+                   "seeds": list(SEEDS), "budgets": list(BUDGETS),
+                   "n_lanes": n_lanes, "dataset": "unsw",
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "frontier": {
+            "schedule": "adaptive",
+            "wall_s_cold": t_frontier_cold,
+            "runner_compiles": misses,
+            "cells": frontier,
+        },
+        "overhead": {
+            "baseline_execute_s_min": t_base,
+            "baseline_execute_s_all": base_walls,
+            "scheduled_execute_s_min": t_sched,
+            "scheduled_execute_s_all": sched_walls,
+            "warm_n": WARM_N,
+            "ratio": overhead,
+            "pass_within_5pct": gate,
+            "gated": not SMOKE,
+        },
+        "offline_check": {
+            "z": z_engine,
+            "q": q,
+            "released_rounds": released,
+            "eps_in_scan": res.eps_spent,
+            "eps_offline_f64": eps_offline,
+            "rel_err": eps_err,
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+
+    print(f"  frontier x{n_lanes} lanes (adaptive): "
+          f"{t_frontier_cold:7.2f}s cold, 1 compile")
+    for c in frontier:
+        print(f"    budget {c['budget']:8.0f}: auc={c['auc_mean']:.3f} "
+              f"eps={c['eps_spent_mean']:9.2f} "
+              f"sigma {c['sigma_first']:.4f}->{c['sigma_last']:.4f} "
+              f"live={c['live_frac_last']:.2f}")
+    print(f"  overhead: scheduled {t_sched:.2f}s vs baseline {t_base:.2f}s "
+          f"(warm min-of-{WARM_N}) -> ratio {overhead:.3f} "
+          f"(<=1.05: {gate}{', not gated in smoke' if SMOKE else ''})")
+    print(f"  offline ε check: |rel err| = {eps_err:.2e} (<= 1e-6)")
+    print(f"  -> {os.path.abspath(OUT)}")
+
+    csv_rows.append(("privacy/frontier_cold_s", t_frontier_cold * 1e6,
+                     n_lanes * ROUNDS / t_frontier_cold))
+    csv_rows.append(("privacy/overhead_ratio", t_sched * 1e6, overhead))
+    return report
+
+
+if __name__ == "__main__":
+    # Standalone (and CI) entry: correctness assertions raise always; the
+    # warm-wall overhead gate exits nonzero only in full mode, so one noisy
+    # timing cannot abort the rest of benchmarks/run.py.
+    report = run([])
+    if report["overhead"]["gated"] and not report["overhead"]["pass_within_5pct"]:
+        raise SystemExit(
+            f"privacy overhead gate failed: ratio "
+            f"{report['overhead']['ratio']:.3f} > 1.05")

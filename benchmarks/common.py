@@ -15,7 +15,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import FLConfig
 from repro.data.synthetic import make_federated
@@ -60,8 +61,23 @@ def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
 # cell can never silently mix trials from different engines (the scan/vmap
 # engine replaced the legacy loop's host-NumPy batch stream in PR 1;
 # "sweep2": runtime FLParams — the DP noise scale is now derived from
-# traced f32 scalars on device instead of a host f64 constant).
-ENGINE_REV = "sweep2"
+# traced f32 scalars on device instead of a host f64 constant; "privacy3":
+# road_like was vectorised, changing its RNG draw order — road federations
+# differ sample-for-sample from the loop generator's).
+ENGINE_REV = "privacy3"
+
+
+def warm_min(fn: Callable[[], object], n: int) -> Tuple[float, List[float]]:
+    """(min, all) wall seconds of ``n`` calls of an already-compiled
+    ``fn`` — the ONLY timing protocol acceptance gates may use on this
+    container (very noisy wall clocks: a gate must never read a single
+    cold run).  Compile/warm ``fn`` once before calling this."""
+    walls = []
+    for _ in range(n):
+        t0 = time.time()
+        fn()
+        walls.append(time.time() - t0)
+    return min(walls), walls
 
 
 def _key(method, dataset, seed, tag):

@@ -1,12 +1,18 @@
 """Privacy/utility trade-off walkthrough (paper Fig. 3 + beyond-paper DP).
 
-Shows:
+Shows (all ε figures via the privacy subsystem's RDP accountant,
+``repro/privacy`` — the paper reports only the nominal per-release budget):
+
   1. the paper's mechanism (fixed-σ noise on raw updates) vs our hardened
      mode (clip + analytic-σ + RDP accounting) on the same federation,
-  2. the composed ε over rounds from the RDP accountant (the paper reports
-     only the per-release budget),
+     with the ACCOUNTED composed ε printed next to the paper's nominal ε,
+  2. how the composed ε grows with rounds (`compose_epsilon` — the
+     closed-form constant-σ composition; the old per-round Python
+     accumulation loop is gone, the accountant API is the one path),
   3. calibrating σ to hit a TOTAL ε budget over the whole run
      (``noise_multiplier_for_budget``) — the deployment-correct workflow,
+     automated end-to-end by ``dp_scheduled`` configs
+     (examples/privacy_frontier.py),
   4. the sweep engine: the whole ε grid of (1) as ONE compiled program —
      ε is a runtime FLParams lane, so N budgets cost one compile
      (``run_fl_sweep``; docs/ARCHITECTURE.md §Sweeps).
@@ -18,9 +24,9 @@ import dataclasses
 import numpy as np
 
 from repro.configs.base import FLConfig
-from repro.core.dp import (RdpAccountant, gaussian_sigma,
-                           noise_multiplier_for_budget)
+from repro.core.dp import gaussian_sigma
 from repro.data.synthetic import make_federated
+from repro.privacy import compose_epsilon, noise_multiplier_for_budget
 from repro.train.fl_driver import run_fl, run_fl_sweep
 
 ROUNDS = 40
@@ -33,28 +39,35 @@ def main():
                     failure_prob=0.05)
 
     print("== 1. paper mode (fixed sigma, no clip) vs clipped mode ==")
+    print("   (nominal = the paper's per-release label; accounted = RDP-")
+    print("    composed ε over the executed rounds)")
     for mode, sig in (("paper", 0.005), ("paper", 0.02), ("clipped", None)):
         fl = dataclasses.replace(
             base, dp_mode=mode, dp_sigma=sig or 0.01, dp_epsilon=50.0)
         r = run_fl(fed, fl, "proposed", seed=0, rounds=ROUNDS, eval_every=10)
         label = f"{mode}(sigma={sig})" if mode == "paper" else "clipped(eps=50/round)"
-        print(f"  {label:26s} acc={r.accuracy*100:5.1f}% auc={r.auc:.3f}")
+        nominal = "sigma-only" if mode == "paper" else "eps=50/release"
+        print(f"  {label:26s} acc={r.accuracy*100:5.1f}% auc={r.auc:.3f}  "
+              f"nominal {nominal:>15s} | accounted eps={r.eps_spent:10.2f}")
 
-    print("\n== 2. composed epsilon over rounds (RDP accountant) ==")
+    print("\n== 2. composed epsilon over rounds (accountant API) ==")
     sigma = gaussian_sigma(50.0, 1e-5, 5.0)
     z = sigma / 5.0
-    acct = RdpAccountant(1e-5)
-    for r in range(ROUNDS):
-        acct.step(z, q=6 / 20)
-        if (r + 1) % 10 == 0:
-            print(f"  after {r+1:3d} rounds: eps = {acct.epsilon():8.2f} "
-                  f"(per-release eps was 50)")
+    for r in range(10, ROUNDS + 1, 10):
+        eps = compose_epsilon(z, q=6 / 20, steps=r, delta=1e-5)
+        print(f"  after {r:3d} rounds: eps = {eps:8.2f} "
+              f"(per-release eps was 50)")
 
     print("\n== 3. calibrate to a TOTAL budget (the deployment workflow) ==")
     for eps_total in (8.0, 20.0, 50.0):
         z = noise_multiplier_for_budget(eps_total, 1e-5, ROUNDS, q=6 / 20)
+        spent = compose_epsilon(z, 6 / 20, ROUNDS, 1e-5)
         print(f"  total eps={eps_total:5.1f} over {ROUNDS} rounds -> "
-              f"noise multiplier z={z:.3f} (sigma={z*5.0:.3f} at clip=5)")
+              f"noise multiplier z={z:.3f} (sigma={z*5.0:.3f} at clip=5, "
+              f"accounted eps={spent:.2f})")
+    print("  (dp_scheduled=True configs run this calibration inside the "
+          "compiled program\n   and halt at exhaustion — see "
+          "examples/privacy_frontier.py)")
 
     print("\n== 4. an epsilon GRID as one compiled sweep program ==")
     fl = dataclasses.replace(base, dp_mode="clipped")
@@ -63,8 +76,8 @@ def main():
                         seeds=(0, 1), rounds=ROUNDS, eval_every=10)
     for eps, row in zip(epsilons, grid):
         acc = np.mean([r.accuracy for r in row])
-        print(f"  eps/round={eps:7.1f}  acc={acc*100:5.1f}% "
-              f"(composed eps={row[0].eps_spent:9.2f}, {len(row)} seeds, "
+        print(f"  nominal eps/round={eps:7.1f}  acc={acc*100:5.1f}% "
+              f"(accounted eps={row[0].eps_spent:9.2f}, {len(row)} seeds, "
               f"same program as every other row)")
 
 

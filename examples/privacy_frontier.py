@@ -1,0 +1,66 @@
+"""The privacy-budget frontier, compiled (ISSUE 3 walkthrough).
+
+The paper's headline trade-off — higher privacy budgets → less noise →
+better accuracy — as a *total-budget* experiment with real accounting:
+
+  1. a TOTAL (ε, δ) budget per run (``dp_budget``), turned into a
+     per-round σ by a budget scheduler (``repro/privacy/schedule.py``);
+  2. an in-scan RDP accountant composes the actual spend every round and
+     **withholds any release that would overshoot the budget** — past
+     exhaustion the global model is frozen, like a halted deployment;
+  3. budgets AND schedule choices are runtime FLParams lanes, so the whole
+     (budget × schedule × seed) frontier below is ONE compiled program.
+
+Run:  PYTHONPATH=src python examples/privacy_frontier.py
+"""
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.privacy import schedule as sched_lib
+from repro.train import fl_driver
+
+ROUNDS = 40
+BUDGETS = (200.0, 1000.0, 5000.0)
+SEEDS = (0, 1)
+
+
+def main():
+    fed = make_federated(0, "unsw", n_samples=6_000, n_clients=20)
+    fl = FLConfig(n_clients=20, clients_per_round=6, local_epochs=5,
+                  local_batch=32, local_lr=0.08, dp_clip=1.0,
+                  dp_scheduled=True, failure_prob=0.05)
+
+    cells = [{"dp_budget": b, "dp_sched": sched_lib.schedule_code(s)}
+             for b in BUDGETS for s in ("uniform", "adaptive")]
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    grid = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                  rounds=ROUNDS, eval_every=5)
+    compiles = fl_driver.RUNNER_STATS["misses"] - m0
+
+    print(f"== ε-vs-AUC frontier: {len(cells)} cells x {len(SEEDS)} seeds, "
+          f"{compiles} compile ==")
+    print(f"{'budget':>8} {'schedule':>9} {'acc ε':>9} {'AUC':>6} "
+          f"{'σ first→last':>15} {'exhausted at':>12}")
+    for cell, row in zip(cells, grid):
+        sched = sched_lib.SCHEDULES[int(cell["dp_sched"])]
+        auc = float(np.mean([r.auc for r in row]))
+        eps = float(np.mean([r.eps_spent for r in row]))
+        h = row[0].history
+        dead = [r_ for r_, live in zip(h["round"], h["live"]) if live < 1.0]
+        print(f"{cell['dp_budget']:8.0f} {sched:>9} {eps:9.1f} {auc:6.3f} "
+              f"{h['sigma'][0]:7.4f}→{h['sigma'][-1]:6.4f} "
+              f"{('round %d' % dead[0]) if dead else 'never':>12}")
+
+    print("\nReading the frontier:")
+    print("  * more budget → smaller calibrated σ → higher AUC (Fig. 3's")
+    print("    claim, now under composed accounting, not nominal ε);")
+    print("  * 'adaptive' spends budget faster whenever validation AUC")
+    print("    stalls (less noise per round) and may exhaust early — the")
+    print("    frozen tail shows as a constant accuracy trace;")
+    print("  * every row shares one XLA program: dp_budget/dp_sched are")
+    print("    runtime lanes, like ε was in examples/dp_tradeoff.py §4.")
+
+
+if __name__ == "__main__":
+    main()

@@ -230,6 +230,16 @@ class FLConfig:
     dp_clip: float = 1.0
     dp_mode: str = "clipped"            # "paper" (fixed sigma, no clip) | "clipped"
     dp_sigma: float = 0.01              # used in "paper" mode
+    # scheduled budget accounting (repro/privacy): STATIC gate — when True,
+    # the engine carries an RDP accountant + budget scheduler through the
+    # round scan, σ becomes a per-round scheduler output, and rounds whose
+    # release would overshoot dp_budget are withheld from the global model
+    # (budget-exhaustion masking).  The knobs below are RUNTIME lanes.
+    dp_scheduled: bool = False
+    dp_budget: float = 50.0             # TOTAL (ε, dp_delta) budget for the run
+    dp_sched: float = 0.0               # schedule code: 0 uniform | 1 linear | 2 adaptive
+    dp_sched_rate: float = 0.3          # linear slope / adaptive spend step
+    dp_stall_tol: float = 1e-3          # adaptive: AUC gain that counts as progress
     # --- fault tolerance ---
     fault_tolerance: bool = True
     failure_prob: float = 0.05          # per-client per-round Bernoulli draw
@@ -262,6 +272,10 @@ class FLParams(NamedTuple):
     dp_epsilon: float = 8.0
     dp_sigma: float = 0.01
     dp_clip: float = 1.0
+    dp_budget: float = 50.0
+    dp_sched: float = 0.0
+    dp_sched_rate: float = 0.3
+    dp_stall_tol: float = 1e-3
     failure_prob: float = 0.05
     recovery_time: float = 30.0
     avail_prob: float = 0.95

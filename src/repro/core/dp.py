@@ -22,11 +22,10 @@ kernel in ``repro.kernels.dp_clip_noise`` implements the flat hot loop.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 # ---------------------------------------------------------------------------
@@ -107,82 +106,12 @@ def privatize_update(tree, key, *, mode: str, clip: float, sigma: float,
 
 
 # ---------------------------------------------------------------------------
-# RDP accountant (Gaussian mechanism, client-level, fixed-size selection)
+# RDP accountant — moved to repro.privacy.accountant (PR 3); re-exported
+# here so existing call sites (`dp_lib.RdpAccountant`, ...) keep working.
 # ---------------------------------------------------------------------------
 
-_ORDERS = tuple([1.25, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0,
-                 16.0, 20.0, 32.0, 48.0, 64.0, 128.0, 256.0])
-
-
-def rdp_gaussian(noise_multiplier: float, orders=_ORDERS) -> np.ndarray:
-    """RDP of one Gaussian release: eps(alpha) = alpha / (2 z^2)."""
-    a = np.asarray(orders, dtype=np.float64)
-    return a / (2.0 * noise_multiplier**2)
-
-
-def rdp_subsampled_gaussian(noise_multiplier: float, q: float,
-                            orders=_ORDERS) -> np.ndarray:
-    """Cheap upper bound on RDP with sampling fraction q.
-
-    Uses eps'(alpha) <= min(eps(alpha), 2 q^2 alpha / z^2) — the small-q
-    amplification bound (valid for q·alpha ≲ z); we take the elementwise min
-    with the unamplified value so it is never worse than no amplification.
-    """
-    base = rdp_gaussian(noise_multiplier, orders)
-    a = np.asarray(orders, dtype=np.float64)
-    amplified = 2.0 * (q**2) * a / (noise_multiplier**2)
-    return np.minimum(base, amplified)
-
-
-def rdp_to_dp(rdp: np.ndarray, delta: float, orders=_ORDERS) -> Tuple[float, float]:
-    """Convert composed RDP curve to (epsilon, best_order)."""
-    a = np.asarray(orders, dtype=np.float64)
-    eps = rdp + np.log1p(-1.0 / a) - (np.log(delta) + np.log(a)) / (a - 1.0)
-    i = int(np.argmin(eps))
-    return float(eps[i]), float(a[i])
-
-
-class RdpAccountant:
-    """Tracks cumulative privacy loss over communication rounds."""
-
-    def __init__(self, delta: float, orders=_ORDERS):
-        self.delta = delta
-        self.orders = orders
-        self._rdp = np.zeros(len(orders), dtype=np.float64)
-        self.steps = 0
-
-    def step(self, noise_multiplier: float, q: float = 1.0):
-        if q >= 1.0:
-            self._rdp += rdp_gaussian(noise_multiplier, self.orders)
-        else:
-            self._rdp += rdp_subsampled_gaussian(noise_multiplier, q, self.orders)
-        self.steps += 1
-
-    def epsilon(self) -> float:
-        if self.steps == 0:
-            return 0.0
-        return rdp_to_dp(self._rdp, self.delta, self.orders)[0]
-
-
-def noise_multiplier_for_budget(epsilon: float, delta: float, rounds: int,
-                                q: float = 1.0) -> float:
-    """Smallest z such that `rounds` compositions stay within (eps, delta).
-
-    Bisection over the accountant — the beyond-paper calibration (the paper
-    calibrates a single release only).
-    """
-    lo, hi = 1e-2, 1e4
-
-    def eps_of(z):
-        acc = RdpAccountant(delta)
-        for _ in range(rounds):
-            acc.step(z, q)
-        return acc.epsilon()
-
-    for _ in range(80):
-        mid = math.sqrt(lo * hi)
-        if eps_of(mid) > epsilon:
-            lo = mid
-        else:
-            hi = mid
-    return hi
+from repro.privacy.accountant import (ORDERS as _ORDERS,  # noqa: E402,F401
+                                      RdpAccountant, compose_epsilon,
+                                      noise_multiplier_for_budget,
+                                      rdp_gaussian, rdp_subsampled_gaussian,
+                                      rdp_to_dp)

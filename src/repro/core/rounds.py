@@ -160,21 +160,49 @@ def _effective_steps(fail_step, local_steps: int, ckpt_every: int, ft_enabled: b
 
 
 def _dp_sigma(fl: FLConfig, pr: FLParams):
-    """Noise scale from runtime params (trace-safe; dp_mode stays static)."""
-    if fl.dp_mode == "paper":
+    """Noise scale from runtime params (trace-safe; dp_mode stays static).
+
+    Scheduled-budget runs (``fl.dp_scheduled``, STATIC) read σ straight
+    from ``pr.dp_sigma``: the driver injects the scheduler's per-round
+    value there (``pr._replace(dp_sigma=σ_t)``), so a traced, per-round σ
+    flows into the clip+noise kernels with no recompile.
+    """
+    if fl.dp_mode == "paper" or fl.dp_scheduled:
         return pr.dp_sigma
     return dp_lib.gaussian_sigma_rt(pr.dp_epsilon, fl.dp_delta, pr.dp_clip)
+
+
+def _gate_server_update(update_gate, new_params, new_server_state,
+                        state: RoundState):
+    """Budget-exhaustion masking (repro/privacy): with ``update_gate`` ≤ 0
+    the aggregated release is withheld — global params AND server-optimizer
+    state stay bitwise frozen, exactly as a deployment that halts at
+    exhaustion.  ``update_gate`` is a traced 0/1 scalar, so exhaustion can
+    flip mid-scan without recompiling; ``None`` (every pre-existing caller)
+    compiles the identical ungated program."""
+    if update_gate is None:
+        return new_params, new_server_state
+    live = update_gate > 0
+    new_params = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                              new_params, state.params)
+    new_server_state = jax.tree.map(lambda n, o: jnp.where(live, n, o),
+                                    new_server_state, state.server_opt_state)
+    return new_params, new_server_state
 
 
 def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
                         ckpt_every_steps: int = 2,
                         dp_use_kernel: Optional[bool] = None,
                         grad_accum: int = 1, delta_constraint=None):
-    """Build ``round_step(state, batches, params=None) -> (state, metrics)``.
+    """Build ``round_step(state, batches, params=None, update_gate=None)
+    -> (state, metrics)``.
 
     batches: pytree whose leaves have leading [n_clients, local_steps, ...].
     ``params``: runtime :class:`FLParams`; ``None`` uses the builder config's
-    values (back-compat).  Only the STATIC part of ``fl`` is closed over.
+    values (back-compat).  ``update_gate``: optional traced 0/1 scalar —
+    the privacy subsystem's budget-exhaustion mask (see
+    :func:`_gate_server_update`).  Only the STATIC part of ``fl`` is closed
+    over.
     ``delta_constraint``: optional fn applied to the stacked client deltas —
     steps.py uses it to pin the client axis onto the data mesh axes so GSPMD
     never materialises every client's weights on one shard.
@@ -189,8 +217,8 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
     default_params = fl_params(fl)
 
     def round_step(state: RoundState, batches,
-                   params: Optional[FLParams] = None
-                   ) -> Tuple[RoundState, RoundMetrics]:
+                   params: Optional[FLParams] = None,
+                   update_gate=None) -> Tuple[RoundState, RoundMetrics]:
         pr = default_params if params is None else params
         server = make_server_optimizer(fl.server_opt, pr.server_lr)
         rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
@@ -249,6 +277,8 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         new_params, new_server_state = agg.apply_server_update(
             server, state.params, state.server_opt_state, agg_delta
         )
+        new_params, new_server_state = _gate_server_update(
+            update_gate, new_params, new_server_state, state)
 
         # ---- update-coherence (data-quality observable): cos(Δ_i, Δ_agg) ----
         def _dot(a, b):
@@ -304,7 +334,8 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
     K = fl.serial_clients_in_step is static.  ``ckpt_every_steps`` is the
     same checkpoint interval the parallel plan takes (it used to be
     hardcoded to 2 here, so a configured interval silently only applied to
-    the parallel plan).  ``params``: runtime :class:`FLParams` as in
+    the parallel plan).  ``params``/``update_gate``: runtime
+    :class:`FLParams` and the budget-exhaustion mask, as in
     :func:`make_parallel_round`.
     """
     strategy = sel_lib.get_strategy(fl.selection)
@@ -314,8 +345,8 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
     default_params = fl_params(fl)
 
     def round_step(state: RoundState, batches,
-                   params: Optional[FLParams] = None
-                   ) -> Tuple[RoundState, RoundMetrics]:
+                   params: Optional[FLParams] = None,
+                   update_gate=None) -> Tuple[RoundState, RoundMetrics]:
         pr = default_params if params is None else params
         server = make_server_optimizer(fl.server_opt, pr.server_lr)
         sigma = _dp_sigma(fl, pr) if fl.dp_enabled else 0.0
@@ -377,6 +408,8 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         new_params, new_server_state = agg.apply_server_update(
             server, state.params, state.server_opt_state, agg_delta
         )
+        new_params, new_server_state = _gate_server_update(
+            update_gate, new_params, new_server_state, state)
 
         contrib = slot_live * (eff_steps > 0)
         denom = jnp.maximum(jnp.sum(contrib), 1.0)

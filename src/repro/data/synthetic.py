@@ -67,6 +67,26 @@ def unsw_nb15_like(rng: np.random.Generator, n: int) -> Tuple[np.ndarray, np.nda
     return X.astype(np.float32), y.astype(np.int32), (y > 0).astype(np.int32)
 
 
+def _corr_lastaxis(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Pearson correlation along the last axis (batched ``np.corrcoef``);
+    0 where either side is (near-)constant."""
+    ac = a - a.mean(-1, keepdims=True)
+    bc = b - b.mean(-1, keepdims=True)
+    sa = np.sqrt((ac * ac).mean(-1))
+    sb = np.sqrt((bc * bc).mean(-1))
+    denom = sa * sb
+    safe = denom > 1e-18
+    num = (ac * bc).mean(-1)
+    return np.where(safe, num / np.where(safe, denom, 1.0), 0.0)
+
+
+def _roll_lastaxis(x: np.ndarray, shift: np.ndarray) -> np.ndarray:
+    """``np.roll`` along the last axis with a per-row shift (gather)."""
+    window = x.shape[-1]
+    idx = (np.arange(window)[None, :] - shift[:, None]) % window
+    return np.take_along_axis(x, idx, axis=-1)
+
+
 def road_like(
     rng: np.random.Generator,
     n: int,
@@ -83,7 +103,72 @@ def road_like(
     Features: per-signal (mean, std, mean |Δ|, lag-1 autocorr, corr to
     signal 0) -> 5·n_signals features.
     Returns (X, y, y) — binary labels only (matches our ROAD use).
+
+    Fully vectorised across windows/signals (the per-window Python loop made
+    this the hot spot of ``benchmarks/run.py``); only the AR(1) recursion
+    iterates, over the ``window`` axis.  ``_road_like_loop`` keeps the
+    original per-window implementation as the statistical oracle
+    (tests/test_synthetic_road.py) — the two draw the RNG in different
+    orders, so they match in distribution, not sample-for-sample.
     """
+    y = (rng.random(n) < attack_rate).astype(np.int32)
+    t = np.arange(window)
+
+    # shared low-frequency driver per window: sin(2π t/window · f + φ0)
+    freq = rng.uniform(0.5, 2.0, n)
+    phase0 = rng.uniform(0, 6.28, n)
+    driver = np.sin(2 * np.pi * t[None, :] / window * freq[:, None]
+                    + phase0[:, None])                       # [n, window]
+
+    phase = rng.uniform(0, 6.28, (n, n_signals))
+    gain = rng.uniform(0.5, 1.5, (n, n_signals))
+    ar = rng.uniform(0.7, 0.95, (n, n_signals))
+    noise = rng.normal(0, 0.15, (n, n_signals, window))
+
+    # AR(1): x_k = ar·x_{k-1} + noise_k — sequential in k only
+    x = np.zeros((n, n_signals, window))
+    for k in range(1, window):
+        x[:, :, k] = ar * x[:, :, k - 1] + noise[:, :, k]
+
+    shift_d = (phase * 3).astype(np.int64).reshape(-1)
+    rolled = _roll_lastaxis(
+        np.repeat(driver, n_signals, axis=0), shift_d
+    ).reshape(n, n_signals, window)
+    sig = gain[..., None] * rolled + x
+
+    # masquerade: victim signal <- replayed source + offset, attack rows only
+    atk = np.flatnonzero(y)
+    if atk.size:
+        victim = rng.integers(0, n_signals, atk.size)
+        # uniform ordered pair without replacement: src = victim + U[1, S)
+        src = (victim + rng.integers(1, n_signals, atk.size)) % n_signals
+        shift = rng.integers(1, window // 4, atk.size)
+        sig[atk, victim] = _roll_lastaxis(sig[atk, src], shift) + offset
+
+    # per-signal features: mean, std, mean |Δ|, lag-1 autocorr, corr to sig 0
+    mean = sig.mean(-1)
+    std = sig.std(-1)
+    dxm = np.abs(np.diff(sig, axis=-1)).mean(-1)
+    live = std > 1e-9
+    acorr = np.where(live, _corr_lastaxis(sig[..., :-1], sig[..., 1:]), 0.0)
+    c0 = np.where(live, _corr_lastaxis(sig, sig[:, :1]), 0.0)
+    c0[:, 0] = 1.0
+    feats = np.stack([mean, std, dxm, acorr, c0], axis=-1).reshape(n, -1)
+    feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-9)
+    return feats.astype(np.float32), y, y
+
+
+def _road_like_loop(
+    rng: np.random.Generator,
+    n: int,
+    window: int = 64,
+    n_signals: int = 6,
+    attack_rate: float = 0.25,
+    offset: float = 0.35,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Original per-window loop — the oracle :func:`road_like` is tested
+    against for statistical equivalence (kept small-n only; it is the slow
+    path the vectorisation replaced)."""
     y = (rng.random(n) < attack_rate).astype(np.int32)
     feats = np.empty((n, 5 * n_signals), np.float64)
     t = np.arange(window)

@@ -62,7 +62,10 @@ def dp_clip_noise_tree(tree, key, clip: float, sigma: float, *,
     sweeps them without recompiling).  The Pallas kernel bakes ``sigma`` as
     a compile-time constant, so a traced sigma is folded into the noise
     operand instead (``x·scale + 1.0·(σ·n)`` — same f32 product, one extra
-    elementwise multiply outside the fused pass).
+    elementwise multiply outside the fused pass).  This fold is what lets
+    the privacy subsystem's budget schedulers (``repro/privacy``) drive a
+    *per-round* σ_t through the fused kernel: scheduler output arrives here
+    as ``FLParams.dp_sigma``, a traced value like any other lane.
 
     Returns (noised_tree, pre_clip_global_norm)."""
     if interpret is None:

@@ -1,0 +1,29 @@
+"""Privacy accounting subsystem (PR 3).
+
+* :mod:`repro.privacy.accountant` — Rényi-DP accounting for the
+  subsampled Gaussian mechanism: host-side f64 composition/calibration and
+  the jit-safe :class:`AccountantState` carried through the compiled round
+  loop.
+* :mod:`repro.privacy.schedule` — budget schedulers (uniform / linear /
+  adaptive) selected by a runtime lane code, plus the stall-driven
+  adaptive controller updated on eval boundaries.
+
+Budget-exhaustion semantics live in the engine: `core/rounds.py` masks the
+server update for a round whose release would overshoot the budget, and
+`train/fl_driver.py` carries the accountant/scheduler state and emits the
+accounted ε into the eval trace.  See docs/ARCHITECTURE.md §Privacy.
+"""
+from repro.privacy.accountant import (AccountantState, ORDERS,  # noqa: F401
+                                      RdpAccountant, accountant_step,
+                                      accounted_epsilon, compose_epsilon,
+                                      composed_epsilon_rt,
+                                      epsilon_from_state,
+                                      init_accountant_state,
+                                      noise_multiplier_for_budget,
+                                      noise_multiplier_for_budget_rt,
+                                      rdp_gaussian, rdp_increment,
+                                      rdp_subsampled_gaussian, rdp_to_dp)
+from repro.privacy.schedule import (BOOST_FLOOR, SCHEDULES,  # noqa: F401
+                                    SchedulerState, init_scheduler,
+                                    schedule_code, scheduled_multiplier,
+                                    scheduler_update)

@@ -1,0 +1,250 @@
+"""Rényi-DP accounting for the subsampled Gaussian mechanism.
+
+The privacy subsystem's source of truth (PR 3).  Two faces of the same
+math:
+
+* **Host (NumPy, f64)** — :class:`RdpAccountant`, :func:`compose_epsilon`,
+  :func:`noise_multiplier_for_budget`, :func:`accounted_epsilon`: exact
+  composition for reporting, calibration and offline verification.  These
+  used to live in ``core/dp.py``; that module re-exports them unchanged.
+* **In-scan (jnp, f32)** — :class:`AccountantState` +
+  :func:`accountant_step` + :func:`epsilon_from_state`: the accountant as
+  a ``lax.scan`` carry.  The noise multiplier ``z`` and sampling fraction
+  ``q`` may be traced per-round values (scheduler output, adaptive-K
+  cohort size), so one compiled program accounts any schedule.  The RDP
+  vector is accumulated with Neumaier-compensated summation (two f32
+  arrays), keeping the composed sum accurate to one f32 rounding of the
+  total over hundreds of rounds; the order-dependent conversion constants
+  are folded on the host in f64.  ``tests/test_privacy.py`` pins the
+  in-scan ε against an independent f64 reference at 1e-6.
+
+RDP of one release of the Gaussian mechanism at order α: ``α / (2 z²)``;
+with Poisson-style subsampling at fraction q we use the small-q
+amplification bound ``min(α/(2z²), 2 q² α / z²)`` (never worse than no
+amplification).  Conversion to (ε, δ) uses the tightened bound
+``ε = RDP(α) + log1p(-1/α) − (log δ + log α)/(α−1)`` minimised over a
+fixed order grid.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Order grid shared by every accountant (host and in-scan).
+ORDERS = tuple([1.25, 1.5, 2.0, 2.5, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0,
+                16.0, 20.0, 32.0, 48.0, 64.0, 128.0, 256.0])
+
+
+# ---------------------------------------------------------------------------
+# Host side (NumPy, f64) — reporting, calibration, offline verification
+# ---------------------------------------------------------------------------
+
+
+def rdp_gaussian(noise_multiplier: float, orders=ORDERS) -> np.ndarray:
+    """RDP of one Gaussian release: eps(alpha) = alpha / (2 z^2)."""
+    a = np.asarray(orders, dtype=np.float64)
+    return a / (2.0 * noise_multiplier**2)
+
+
+def rdp_subsampled_gaussian(noise_multiplier: float, q: float,
+                            orders=ORDERS) -> np.ndarray:
+    """Cheap upper bound on RDP with sampling fraction q.
+
+    Uses eps'(alpha) <= min(eps(alpha), 2 q^2 alpha / z^2) — the small-q
+    amplification bound (valid for q·alpha ≲ z); we take the elementwise min
+    with the unamplified value so it is never worse than no amplification.
+    """
+    base = rdp_gaussian(noise_multiplier, orders)
+    a = np.asarray(orders, dtype=np.float64)
+    amplified = 2.0 * (q**2) * a / (noise_multiplier**2)
+    return np.minimum(base, amplified)
+
+
+def conversion_consts(delta: float, orders=ORDERS) -> np.ndarray:
+    """Order-dependent part of the RDP→(ε, δ) bound (f64, host-folded):
+    ``log1p(-1/α) − (log δ + log α)/(α−1)``."""
+    a = np.asarray(orders, dtype=np.float64)
+    return np.log1p(-1.0 / a) - (np.log(delta) + np.log(a)) / (a - 1.0)
+
+
+def rdp_to_dp(rdp: np.ndarray, delta: float, orders=ORDERS) -> Tuple[float, float]:
+    """Convert composed RDP curve to (epsilon, best_order)."""
+    a = np.asarray(orders, dtype=np.float64)
+    eps = rdp + conversion_consts(delta, orders)
+    i = int(np.argmin(eps))
+    return float(eps[i]), float(a[i])
+
+
+class RdpAccountant:
+    """Tracks cumulative privacy loss over communication rounds (host)."""
+
+    def __init__(self, delta: float, orders=ORDERS):
+        self.delta = delta
+        self.orders = orders
+        self._rdp = np.zeros(len(orders), dtype=np.float64)
+        self.steps = 0
+
+    def step(self, noise_multiplier: float, q: float = 1.0):
+        if q >= 1.0:
+            self._rdp += rdp_gaussian(noise_multiplier, self.orders)
+        else:
+            self._rdp += rdp_subsampled_gaussian(noise_multiplier, q,
+                                                 self.orders)
+        self.steps += 1
+
+    def epsilon(self) -> float:
+        if self.steps == 0:
+            return 0.0
+        return rdp_to_dp(self._rdp, self.delta, self.orders)[0]
+
+
+def compose_epsilon(noise_multiplier: float, q: float, steps: int,
+                    delta: float, orders=ORDERS) -> float:
+    """Closed-form constant-z composition: ε after ``steps`` releases.
+
+    Equivalent to ``steps`` :meth:`RdpAccountant.step` calls (the per-step
+    RDP vector is constant), without the Python loop.
+    """
+    if steps <= 0:
+        return 0.0
+    rdp = steps * rdp_subsampled_gaussian(noise_multiplier, min(q, 1.0),
+                                          orders)
+    return rdp_to_dp(rdp, delta, orders)[0]
+
+
+def noise_multiplier_for_budget(epsilon: float, delta: float, rounds: int,
+                                q: float = 1.0) -> float:
+    """Smallest z such that `rounds` compositions stay within (eps, delta).
+
+    Geometric bisection over the closed-form composition; returns the side
+    that satisfies the budget (ε(z) ≤ epsilon).
+    """
+    lo, hi = 1e-2, 1e4
+    for _ in range(80):
+        mid = math.sqrt(lo * hi)
+        if compose_epsilon(mid, q, rounds, delta) > epsilon:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def accounted_epsilon(fl, rounds: int) -> float:
+    """DP budget actually spent by a fixed-σ run of ``rounds`` rounds of
+    ``fl`` (an :class:`repro.configs.base.FLConfig`) — the accountant-backed
+    replacement for the old ``fl_driver.spent_epsilon``.
+
+    Scheduled runs (``fl.dp_scheduled``) vary σ and the cohort per round, so
+    their ε comes from the in-scan accountant's trace, not from here.
+    """
+    if not fl.dp_enabled:
+        return 0.0
+    if fl.dp_scheduled:
+        raise ValueError(
+            "dp_scheduled runs report ε from the in-scan accountant "
+            "(RunResult.history['eps']), not from a host-side closed form")
+    from repro.core import dp as dp_lib  # local: core/dp re-exports us
+
+    sigma = (fl.dp_sigma if fl.dp_mode == "paper"
+             else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip))
+    q = fl.clients_per_round / fl.n_clients
+    z = max(sigma / max(fl.dp_clip, 1e-9), 1e-3)
+    return compose_epsilon(z, q, rounds, fl.dp_delta)
+
+
+# ---------------------------------------------------------------------------
+# In-scan side (jnp, f32) — the accountant as a lax.scan carry
+# ---------------------------------------------------------------------------
+
+
+class AccountantState(NamedTuple):
+    """Cumulative RDP curve, carried through the compiled round loop.
+
+    ``rdp``/``rdp_c`` are the Neumaier-compensated (sum, carry) pair per
+    order — ``rdp + rdp_c`` is the composed RDP accurate to ~1 ulp of the
+    total in f32.  All leaves are jnp arrays, so the state vmaps over sweep
+    lanes like any other carry.
+    """
+
+    rdp: jnp.ndarray     # [n_orders] f32 — running sum
+    rdp_c: jnp.ndarray   # [n_orders] f32 — compensation carry
+    steps: jnp.ndarray   # i32 scalar — committed releases
+
+
+def init_accountant_state(orders=ORDERS) -> AccountantState:
+    n = len(orders)
+    return AccountantState(
+        rdp=jnp.zeros((n,), jnp.float32),
+        rdp_c=jnp.zeros((n,), jnp.float32),
+        steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def rdp_increment(noise_multiplier, q, orders=ORDERS) -> jnp.ndarray:
+    """One release's RDP vector; ``noise_multiplier``/``q`` may be traced
+    (per-round scheduler output / adaptive-K cohort fraction).  At q = 1 the
+    amplified term is never the min, so the elementwise minimum reproduces
+    the host accountant's q ≥ 1 branch without a trace-unfriendly cond."""
+    a = jnp.asarray(np.asarray(orders, np.float64), jnp.float32)
+    z2 = jnp.square(jnp.maximum(noise_multiplier, 1e-6))
+    base = a / (2.0 * z2)
+    amplified = 2.0 * jnp.square(q) * a / z2
+    return jnp.minimum(base, amplified)
+
+
+def accountant_step(state: AccountantState, noise_multiplier, q,
+                    orders=ORDERS) -> AccountantState:
+    """Compose one release into the carried state (Neumaier two-sum)."""
+    inc = rdp_increment(noise_multiplier, q, orders)
+    s = state.rdp + inc
+    larger = jnp.abs(state.rdp) >= jnp.abs(inc)
+    big = jnp.where(larger, state.rdp, inc)
+    small = jnp.where(larger, inc, state.rdp)
+    return AccountantState(
+        rdp=s,
+        rdp_c=state.rdp_c + ((big - s) + small),
+        steps=state.steps + 1,
+    )
+
+
+def epsilon_from_state(state: AccountantState, delta: float,
+                       orders=ORDERS) -> jnp.ndarray:
+    """(ε, δ)-conversion of the carried RDP curve — called on eval
+    boundaries (and for the exhaustion check).  ``delta`` is static, so the
+    order constants fold on the host in f64."""
+    const = jnp.asarray(conversion_consts(delta, orders), jnp.float32)
+    eps = (state.rdp + state.rdp_c) + const
+    return jnp.where(state.steps > 0, jnp.min(eps), 0.0)
+
+
+def composed_epsilon_rt(noise_multiplier, q, steps, delta: float,
+                        orders=ORDERS) -> jnp.ndarray:
+    """Trace-safe constant-z composition (jnp twin of
+    :func:`compose_epsilon`): ``steps`` is static, ``z``/``q`` may be
+    traced.  Used by the scheduler's budget calibration."""
+    const = jnp.asarray(conversion_consts(delta, orders), jnp.float32)
+    eps = steps * rdp_increment(noise_multiplier, q, orders) + const
+    return jnp.min(eps)
+
+
+def noise_multiplier_for_budget_rt(epsilon, delta: float, rounds: int, q,
+                                   iters: int = 60) -> jnp.ndarray:
+    """Trace-safe twin of :func:`noise_multiplier_for_budget`: geometric
+    bisection under ``jit`` — ``epsilon`` (the total budget) and ``q`` may
+    be traced sweep lanes, so a whole budget grid calibrates inside one
+    compiled program.  Returns the budget-satisfying side."""
+    def body(_, lo_hi):
+        lo, hi = lo_hi
+        mid = jnp.sqrt(lo * hi)
+        over = composed_epsilon_rt(mid, q, rounds, delta) > epsilon
+        return jnp.where(over, mid, lo), jnp.where(over, hi, mid)
+
+    lo0 = jnp.asarray(1e-2, jnp.float32)
+    hi0 = jnp.asarray(1e4, jnp.float32)
+    _, hi = jax.lax.fori_loop(0, iters, body, (lo0 + 0.0 * epsilon,
+                                               hi0 + 0.0 * epsilon))
+    return hi

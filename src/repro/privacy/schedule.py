@@ -1,0 +1,110 @@
+"""Privacy-budget schedulers: how a total (ε, δ) budget is spent per round.
+
+A scheduler turns the runtime budget knobs (``FLParams.dp_budget``,
+``dp_sched``, ``dp_sched_rate``, ``dp_stall_tol``) into a per-round noise
+multiplier ``z_t`` (σ_t = z_t · clip).  Three schedules, all computed
+branch-free and selected by the runtime code ``dp_sched`` — the schedule
+choice is a **sweep lane**, not a compile-time option:
+
+* ``uniform``  (0) — constant z, calibrated so the composed ε over the
+  planned rounds meets the budget exactly
+  (:func:`~repro.privacy.accountant.noise_multiplier_for_budget_rt`).
+* ``linear``   (1) — noise decays linearly from ``(1+rate)·z`` to
+  ``(1−rate)·z``: early rounds are cheap (model far from converged), late
+  rounds spend more budget where precision matters.
+* ``adaptive`` (2) — starts at the uniform z and *spends more budget /
+  less noise when validation AUC stalls*, mirroring the paper's adaptive-K
+  plateau logic: each non-improving eval block multiplies the noise by
+  ``(1 − rate)`` (floored), so a stalled model trades remaining budget for
+  signal.
+
+Schedules other than ``uniform`` deliberately leave exact calibration to
+the **accountant + exhaustion masking** (`train/fl_driver.py`): the
+in-scan accountant tracks the actual composed ε every round, and a round
+whose release would overshoot ``dp_budget`` is withheld from the global
+model — exactly how a deployment halts at budget exhaustion.  An adaptive
+run that spends fast therefore exhausts (and freezes) early; a uniform run
+exhausts on its final round by construction.
+
+The scheduler state rides the ``lax.scan`` carry next to the
+:class:`~repro.privacy.accountant.AccountantState`; updates happen on eval
+boundaries only (AUC is computed there), so σ is piecewise-constant per
+eval block and flows into the clip+noise kernels as a traced per-round
+value — no recompiles anywhere in a (budget × schedule) sweep.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.privacy import accountant as acct_lib
+
+# Runtime schedule codes (FLParams.dp_sched carries these as f32 lanes).
+SCHEDULES = ("uniform", "linear", "adaptive")
+
+# Adaptive floor: the noise never drops below this fraction of the
+# calibrated base — one stall streak cannot blow the whole budget at once.
+BOOST_FLOOR = 0.25
+
+
+def schedule_code(name: str) -> float:
+    """Runtime lane value for a schedule name."""
+    return float(SCHEDULES.index(name))
+
+
+class SchedulerState(NamedTuple):
+    """Carried per lane through the compiled round loop (all f32)."""
+
+    z_base: jnp.ndarray    # budget-calibrated base noise multiplier
+    boost: jnp.ndarray     # adaptive noise factor in [BOOST_FLOOR, 1]
+    best_auc: jnp.ndarray  # best validation AUC seen (stall detector)
+
+
+def init_scheduler(budget, delta: float, rounds: int, q) -> SchedulerState:
+    """Calibrate the base multiplier for ``budget`` over ``rounds`` planned
+    releases at nominal sampling fraction ``q`` (both may be traced sweep
+    lanes) and start the adaptive controller at no boost."""
+    z = acct_lib.noise_multiplier_for_budget_rt(budget, delta, rounds, q)
+    one = jnp.ones((), jnp.float32)
+    zero = jnp.zeros((), jnp.float32)
+    return SchedulerState(z_base=z, boost=one, best_auc=zero)
+
+
+def scheduled_multiplier(state: SchedulerState, pr, round_idx,
+                         rounds: int) -> jnp.ndarray:
+    """Per-round noise multiplier z_t.  ``pr`` is the runtime
+    :class:`~repro.configs.base.FLParams`; ``round_idx`` is the traced
+    round counter; ``rounds`` the static plan length.  All three schedules
+    are cheap scalar math, so every branch is computed and the runtime
+    ``dp_sched`` code selects — a schedule sweep shares one program."""
+    t = round_idx.astype(jnp.float32) / float(max(rounds - 1, 1))
+    z_uniform = state.z_base
+    z_linear = state.z_base * (1.0 + pr.dp_sched_rate * (1.0 - 2.0 * t))
+    z_adaptive = state.z_base * state.boost
+    sched = pr.dp_sched
+    z = jnp.where(sched < 0.5, z_uniform,
+                  jnp.where(sched < 1.5, z_linear, z_adaptive))
+    return jnp.maximum(z, 1e-3)
+
+
+def scheduler_update(state: SchedulerState, auc, pr) -> SchedulerState:
+    """Eval-boundary update (the only place AUC exists).  The adaptive-K
+    plateau rule transplanted to the privacy axis, at eval-block
+    granularity: a block whose AUC fails to beat the best seen by
+    ``dp_stall_tol`` is a stall, and every stalled block shrinks the
+    adaptive noise factor by ``(1 − dp_sched_rate)`` down to
+    :data:`BOOST_FLOOR` — spend more budget when progress stops.  The
+    patience is one eval block, i.e. ``eval_every`` ROUNDS of no progress
+    (AUC only exists per block, so that is the finest plateau the engine
+    can observe).  Uniform/linear lanes carry the same state but never
+    read ``boost``."""
+    improved = auc > state.best_auc + pr.dp_stall_tol
+    boost = jnp.where(
+        improved, state.boost,
+        jnp.maximum(state.boost * (1.0 - pr.dp_sched_rate), BOOST_FLOOR))
+    return SchedulerState(
+        z_base=state.z_base,
+        boost=boost,
+        best_auc=jnp.maximum(state.best_auc, auc),
+    )

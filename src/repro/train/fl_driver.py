@@ -25,6 +25,11 @@ Execution engines (docs/ARCHITECTURE.md):
   There is no host sync until the final history readback.
 * :func:`run_fl` / :func:`run_fl_batch` — single-cell front doors of the
   same engine (a sweep of one config; a batch of one seed).
+* Scheduled-budget privacy (``FLConfig.dp_scheduled``): the privacy
+  subsystem's RDP accountant + budget scheduler ride the scan carry —
+  per-round σ from the scheduler, exhaustion masking via the round step's
+  ``update_gate``, accounted ε in the eval trace (``repro/privacy``,
+  docs/ARCHITECTURE.md §Privacy).
 * :func:`run_fl_legacy` — the original per-round Python loop, kept as the
   semantic oracle: tests/test_engine.py checks the scanned engine against
   it, and benchmarks/bench_engine.py records the old-vs-new rounds/sec
@@ -44,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 import weakref
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
@@ -54,13 +60,15 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import (FLConfig, FLParams, fl_params, fl_static)
-from repro.core import dp as dp_lib
 from repro.core import fault as fault_lib
 from repro.core import rounds as rounds_lib
 from repro.data.synthetic import (FederatedData, StackedFederation,
                                   round_batches, sample_round_batches,
                                   stack_federation)
 from repro.models import mlp as mlp_lib
+from repro.privacy import accountant as acct_lib
+from repro.privacy import schedule as sched_lib
+from repro.privacy.accountant import accounted_epsilon
 
 METHODS = ("proposed", "proposed_noft", "acfl", "fedl2p", "random", "adafl",
            "power_of_choice")
@@ -167,18 +175,16 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
 
 
 def spent_epsilon(fl: FLConfig, rounds: int) -> float:
-    """DP budget actually spent: RDP accountant over the executed rounds
-    (shared by both engines so ε is engine-independent by construction)."""
-    if not fl.dp_enabled:
-        return 0.0
-    sigma = (fl.dp_sigma if fl.dp_mode == "paper"
-             else dp_lib.gaussian_sigma(fl.dp_epsilon, fl.dp_delta, fl.dp_clip))
-    acct = dp_lib.RdpAccountant(fl.dp_delta)
-    q = fl.clients_per_round / fl.n_clients
-    z = max(sigma / max(fl.dp_clip, 1e-9), 1e-3)
-    for _ in range(rounds):
-        acct.step(z, q)
-    return acct.epsilon()
+    """Deprecated alias of :func:`repro.privacy.accounted_epsilon` (PR 3).
+
+    The accountant subsystem is the single source of ε now: fixed-σ runs
+    report the closed-form composition, scheduled runs report the in-scan
+    accountant's trace (``RunResult.history['eps']``)."""
+    warnings.warn(
+        "fl_driver.spent_epsilon is deprecated; use "
+        "repro.privacy.accounted_epsilon (fixed-σ) or the in-scan "
+        "accountant trace (dp_scheduled)", DeprecationWarning, stacklevel=2)
+    return accounted_epsilon(fl, rounds)
 
 
 # ---------------------------------------------------------------------------
@@ -210,8 +216,30 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     so the compiled engine never pays per-round eval (the test-set forward +
     rank-AUC argsort are ~half a round's compute).  A trailing partial block
     handles ``rounds % eval_every`` so the final round is always evaluated.
+
+    Scheduled-budget configs (``fl.dp_scheduled``, STATIC) extend the carry
+    with the privacy subsystem's state: an in-scan RDP
+    :class:`~repro.privacy.accountant.AccountantState` and a
+    :class:`~repro.privacy.schedule.SchedulerState`.  Every round the
+    scheduler emits σ_t, the accountant tentatively composes the release at
+    the CURRENT cohort fraction q_t = k_eff/n (adaptive K changes the
+    subsampling amplification, and the accountant sees it), and a release
+    that would push ε past ``pr.dp_budget`` is withheld via the round
+    step's ``update_gate`` — the global model freezes bitwise at budget
+    exhaustion.  ε is converted from the carried RDP curve on eval
+    boundaries only and emitted into the trace (``eps``/``sigma``/``live``
+    history columns); the scheduler's stall controller also updates there,
+    from the same AUC the eval computes anyway.
     """
     n_full, rem = divmod(rounds, eval_every)
+    scheduled = fl.dp_enabled and fl.dp_scheduled
+    if scheduled and fl.dp_mode != "clipped":
+        raise ValueError(
+            "dp_scheduled requires dp_mode='clipped': the accountant "
+            "composes z_t = sigma_t/dp_clip, which is only a valid "
+            "(epsilon, delta) statement when updates are clipped to "
+            "dp_clip — the paper's unclipped fixed-sigma mode has "
+            "unbounded sensitivity")
 
     def single_run(key, stack: StackedFederation, data_size, data_quality,
                    pr: FLParams):
@@ -220,31 +248,66 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
         round_step = rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl,
                                                     n_clients)
         tx, ty = stack.test_x, stack.test_y
+        k_static = jnp.asarray(float(fl.clients_per_round), jnp.float32)
 
         def one_round(carry, _):
-            state, data_key, cum_time = carry
+            if scheduled:
+                state, data_key, cum_time, acct, sched = carry
+            else:
+                state, data_key, cum_time = carry
             data_key, k_batch = jax.random.split(data_key)
             batches = sample_round_batches(k_batch, stack, fl.local_epochs,
                                            fl.local_batch)
-            state, m = round_step(state, batches, pr)
+            if scheduled:
+                k_eff = state.kctl.k if fl.adaptive_k else k_static
+                q_t = jnp.clip(k_eff / n_clients, 0.0, 1.0)
+                z_t = sched_lib.scheduled_multiplier(sched, pr,
+                                                     state.round_idx, rounds)
+                sigma_t = z_t * pr.dp_clip
+                acct_next = acct_lib.accountant_step(acct, z_t, q_t)
+                eps_next = acct_lib.epsilon_from_state(acct_next, fl.dp_delta)
+                live = (eps_next <= pr.dp_budget).astype(jnp.float32)
+                state, m = round_step(state, batches,
+                                      pr._replace(dp_sigma=sigma_t),
+                                      update_gate=live)
+                # spend the budget only for released rounds
+                acct = jax.tree.map(lambda n, o: jnp.where(live > 0, n, o),
+                                    acct_next, acct)
+            else:
+                state, m = round_step(state, batches, pr)
             cum_time = cum_time + simulate_round_time(fl, state.util,
                                                       m.sel_mask, m.failed,
                                                       params=pr)
+            if scheduled:
+                return ((state, data_key, cum_time, acct, sched),
+                        (m.global_loss, m.k_effective, sigma_t, live))
             return (state, data_key, cum_time), (m.global_loss, m.k_effective)
 
         def eval_block(carry, block_len):
-            carry, (losses, ks) = jax.lax.scan(one_round, carry, None,
-                                               length=block_len)
-            state, _, cum_time = carry
+            carry, ys = jax.lax.scan(one_round, carry, None,
+                                     length=block_len)
+            if scheduled:
+                state, data_key, cum_time, acct, sched = carry
+                losses, ks, sigmas, lives = ys
+            else:
+                state, _, cum_time = carry
+                losses, ks = ys
             acc = mlp_lib.accuracy(state.params, tx, ty)
             proba = mlp_lib.mlp_predict_proba(state.params, tx)[:, 1]
+            auc = mlp_lib.auc_roc_jnp(proba, ty)
             trace = {
                 "loss": losses[-1],
                 "acc": acc,
-                "auc": mlp_lib.auc_roc_jnp(proba, ty),
+                "auc": auc,
                 "k": ks[-1],
                 "cum_time": cum_time,
             }
+            if scheduled:
+                trace["eps"] = acct_lib.epsilon_from_state(acct, fl.dp_delta)
+                trace["sigma"] = sigmas[-1]
+                trace["live"] = jnp.mean(lives)
+                sched = sched_lib.scheduler_update(sched, auc, pr)
+                carry = (state, data_key, cum_time, acct, sched)
             return carry, trace
 
         params = mlp_lib.init_mlp(jax.random.fold_in(key, 0), n_features,
@@ -254,6 +317,14 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
             data_size=data_size, data_quality=data_quality,
         )
         carry = (state, jax.random.fold_in(key, 2), jnp.zeros((), jnp.float32))
+        if scheduled:
+            q_nom = jnp.asarray(min(fl.clients_per_round / n_clients, 1.0),
+                                jnp.float32)
+            carry = carry + (
+                acct_lib.init_accountant_state(),
+                sched_lib.init_scheduler(pr.dp_budget, fl.dp_delta, rounds,
+                                         q_nom),
+            )
         trace = None
         if n_full:
             carry, trace = jax.lax.scan(
@@ -264,7 +335,7 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
             tail = jax.tree.map(lambda x: x[None], tail)
             trace = tail if trace is None else jax.tree.map(
                 lambda a, b: jnp.concatenate([a, b]), trace, tail)
-        state, _, sim_time = carry
+        state, _, sim_time = carry[:3]
         return state.params, sim_time, trace
 
     return single_run
@@ -444,13 +515,17 @@ def run_fl_sweep(
     sim_np = np.asarray(sim_b)
     out: List[List[RunResult]] = []
     for ci, cell in enumerate(cells):
-        eps = spent_epsilon(cell, rounds)
+        # fixed-σ cells: host closed-form composition (engine-independent);
+        # scheduled cells: ε comes from the lane's in-scan accountant trace
+        scheduled = cell.dp_enabled and cell.dp_scheduled
+        eps_cell = None if scheduled else accounted_epsilon(cell, rounds)
         row = []
         for si, seed in enumerate(seeds):
             lane = ci * len(seeds) + si
             history = {"round": [r + 1 for r in eval_idx]}
-            for name in ("loss", "acc", "auc", "k", "cum_time"):
+            for name in trace_np:
                 history[name] = [float(x) for x in trace_np[name][lane]]
+            eps = history["eps"][-1] if scheduled else eps_cell
             sim_time = float(sim_np[lane])
             acc, auc = history["acc"][-1], history["auc"][-1]
             if method == "fedl2p":
@@ -525,8 +600,16 @@ def run_fl_legacy(
 ) -> RunResult:
     """The original dispatch-per-round driver.  Kept (not deprecated) as the
     reference semantics: host-side NumPy batch sampling, one jit'd round
-    step per iteration, eval pulled to host at every ``eval_every``."""
+    step per iteration, eval pulled to host at every ``eval_every``.
+
+    Scheduled-budget accounting (``dp_scheduled``) is a compiled-engine
+    feature — the accountant/scheduler state rides the scan carry — so this
+    loop rejects such configs instead of silently ignoring the budget."""
     fl = fl_for_method(fl, method)
+    if fl.dp_enabled and fl.dp_scheduled:
+        raise ValueError(
+            "run_fl_legacy does not support dp_scheduled configs; use the "
+            "compiled engine (run_fl / run_fl_batch / run_fl_sweep)")
     rounds = rounds or fl.rounds
     rng = np.random.default_rng(seed)
     key = jax.random.key(seed)
@@ -571,7 +654,7 @@ def run_fl_legacy(
         # personalisation pass (the point of FedL2P) + its simulated cost
         acc, auc = _personalize(state.params, fed, seed=seed)
         sim_time *= 1.2
-    eps = spent_epsilon(fl, rounds)
+    eps = accounted_epsilon(fl, rounds)
 
     return RunResult(
         method=method, dataset=dataset, seed=seed,

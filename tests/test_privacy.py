@@ -1,0 +1,294 @@
+"""Privacy-subsystem tests (ISSUE 3): the in-scan RDP accountant, the
+budget schedulers, and the engine's budget-exhaustion semantics.
+
+* the f32 compensated accountant matches an independently written f64
+  offline RDP reference within 1e-6 (relative, floored at 1) on a
+  (z × q × steps) grid — the acceptance grid;
+* accountant monotonicity: ε shrinks with more noise, grows with larger
+  sampling fraction and with more composed steps;
+* the trace-safe budget calibration agrees with the host bisection;
+* scheduler algebra: runtime codes select the right z_t law, the adaptive
+  controller shrinks noise on AUC stalls and respects the floor;
+* exhaustion masking freezes the global model BITWISE (the release gate in
+  core/rounds.py), the accounted ε never exceeds the lane's budget, and a
+  whole budget grid still compiles exactly once;
+* the legacy engine rejects scheduled configs instead of ignoring budgets.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, FLParams, fl_params, fl_static
+from repro.data.synthetic import make_federated
+from repro.models import mlp as mlp_lib
+from repro.privacy import accountant as acct_lib
+from repro.privacy import schedule as sched_lib
+from repro.train import fl_driver
+
+DELTA = 1e-5
+
+
+def _offline_epsilon(z: float, q: float, steps: int, delta: float) -> float:
+    """Trusted offline reference, re-derived in f64 on purpose (NOT imported
+    from repro.privacy): subsampled-Gaussian RDP composed `steps` times,
+    converted with the tightened bound over the shared order grid."""
+    a = np.asarray(acct_lib.ORDERS, np.float64)
+    rdp = steps * np.minimum(a / (2.0 * z * z), 2.0 * q * q * a / (z * z))
+    eps = rdp + np.log1p(-1.0 / a) - (np.log(delta) + np.log(a)) / (a - 1.0)
+    return float(eps.min())
+
+
+def _scan_epsilon(z: float, q: float, steps: int, delta: float) -> float:
+    """ε from the jit-side accountant after a lax.scan of `steps` rounds —
+    exactly how the engine composes it."""
+    zf, qf = jnp.float32(z), jnp.float32(q)
+
+    def body(st, _):
+        return acct_lib.accountant_step(st, zf, qf), None
+
+    st, _ = jax.lax.scan(body, acct_lib.init_accountant_state(), None,
+                         length=steps)
+    return float(acct_lib.epsilon_from_state(st, delta))
+
+
+# ---------------------------------------------------------------------------
+# accountant vs offline reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("z", [0.8, 1.2, 2.0, 4.0])
+@pytest.mark.parametrize("q", [0.1, 0.25, 1.0])
+@pytest.mark.parametrize("steps", [1, 7, 40, 200])
+def test_accountant_matches_offline_reference(z, q, steps):
+    """Acceptance grid: in-scan f32 ε within 1e-6 of the f64 reference.
+
+    The compensated (Neumaier) RDP carry keeps the composed sum exact to
+    ~1 ulp of the total; host-folded f64 conversion constants avoid f32
+    transcendentals.  Measured worst case on this grid: ~8e-8."""
+    zf = float(np.float32(z))  # feed both sides the same representable z/q
+    qf = float(np.float32(q))
+    got = _scan_epsilon(zf, qf, steps, DELTA)
+    ref = _offline_epsilon(zf, qf, steps, DELTA)
+    assert abs(got - ref) <= 1e-6 * max(1.0, abs(ref)), (got, ref)
+
+
+def test_accountant_matches_host_accountant():
+    """The host RdpAccountant (the legacy API, now re-exported from
+    core/dp) and the in-scan accountant are the same curve."""
+    host = acct_lib.RdpAccountant(DELTA)
+    for _ in range(25):
+        host.step(1.3, 0.2)
+    assert abs(_scan_epsilon(1.3, 0.2, 25, DELTA) - host.epsilon()) < 1e-5
+    assert abs(acct_lib.compose_epsilon(1.3, 0.2, 25, DELTA)
+               - host.epsilon()) < 1e-12
+
+
+def test_accountant_monotonicity():
+    # more noise -> less privacy loss
+    eps_by_z = [_scan_epsilon(z, 0.25, 30, DELTA) for z in (0.6, 1.0, 2.0, 4.0)]
+    assert all(a > b for a, b in zip(eps_by_z, eps_by_z[1:])), eps_by_z
+    # larger cohort fraction -> more privacy loss (strict while the
+    # amplification term binds, i.e. 2q² < 1/2; beyond q=0.5 it saturates
+    # at the unamplified Gaussian — check that plateau too)
+    eps_by_q = [_scan_epsilon(1.2, q, 30, DELTA) for q in (0.05, 0.1, 0.2, 0.4)]
+    assert all(a < b for a, b in zip(eps_by_q, eps_by_q[1:])), eps_by_q
+    assert _scan_epsilon(1.2, 0.8, 30, DELTA) == _scan_epsilon(1.2, 1.0, 30, DELTA)
+    # composition only loses privacy
+    eps_by_s = [_scan_epsilon(1.2, 0.25, s, DELTA) for s in (1, 5, 25, 125)]
+    assert all(a < b for a, b in zip(eps_by_s, eps_by_s[1:])), eps_by_s
+    # empty accountant reports zero
+    st = acct_lib.init_accountant_state()
+    assert float(acct_lib.epsilon_from_state(st, DELTA)) == 0.0
+
+
+def test_budget_calibration_rt_matches_host():
+    """The jit bisection and the host bisection land on the same z, and the
+    calibrated z meets its budget under composition."""
+    for eps_total, rounds, q in ((8.0, 40, 0.25), (100.0, 60, 0.2),
+                                 (2000.0, 50, 0.5)):
+        z_host = acct_lib.noise_multiplier_for_budget(eps_total, DELTA,
+                                                      rounds, q)
+        z_rt = float(jax.jit(
+            lambda e: acct_lib.noise_multiplier_for_budget_rt(
+                e, DELTA, rounds, q))(jnp.float32(eps_total)))
+        assert abs(z_rt - z_host) / z_host < 1e-3, (z_rt, z_host)
+        assert acct_lib.compose_epsilon(z_rt, q, rounds, DELTA) <= eps_total * (1 + 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# schedulers
+# ---------------------------------------------------------------------------
+
+
+def _pr(**kw) -> FLParams:
+    return fl_params(FLConfig()).\
+        _replace(**{k: jnp.float32(v) for k, v in kw.items()})
+
+
+def test_schedule_codes_select_the_law():
+    st = sched_lib.SchedulerState(z_base=jnp.float32(2.0),
+                                  boost=jnp.float32(0.5),
+                                  best_auc=jnp.float32(0.0))
+    rounds = 11
+    mid = jnp.asarray(5, jnp.int32)  # t = 0.5 exactly -> linear == base
+    z_uni = float(sched_lib.scheduled_multiplier(
+        st, _pr(dp_sched=0.0), mid, rounds))
+    z_lin0 = float(sched_lib.scheduled_multiplier(
+        st, _pr(dp_sched=1.0, dp_sched_rate=0.4), jnp.asarray(0, jnp.int32),
+        rounds))
+    z_lin_end = float(sched_lib.scheduled_multiplier(
+        st, _pr(dp_sched=1.0, dp_sched_rate=0.4),
+        jnp.asarray(rounds - 1, jnp.int32), rounds))
+    z_ada = float(sched_lib.scheduled_multiplier(
+        st, _pr(dp_sched=2.0), mid, rounds))
+    assert z_uni == 2.0
+    np.testing.assert_allclose(z_lin0, 2.0 * 1.4, rtol=1e-6)
+    np.testing.assert_allclose(z_lin_end, 2.0 * 0.6, rtol=1e-6)
+    np.testing.assert_allclose(z_ada, 2.0 * 0.5, rtol=1e-6)
+
+
+def test_adaptive_controller_spends_on_stall():
+    pr = _pr(dp_sched_rate=0.5, dp_stall_tol=1e-3)
+    st = sched_lib.init_scheduler(jnp.float32(50.0), DELTA, 40,
+                                  jnp.float32(0.25))
+    assert float(st.boost) == 1.0
+    # improving AUC: boost untouched
+    st = sched_lib.scheduler_update(st, jnp.float32(0.7), pr)
+    assert float(st.boost) == 1.0 and float(st.best_auc) == pytest.approx(0.7)
+    # stalled AUC: noise shrinks by (1 - rate)
+    st = sched_lib.scheduler_update(st, jnp.float32(0.7), pr)
+    assert float(st.boost) == pytest.approx(0.5)
+    # repeated stalls bottom out at the floor
+    for _ in range(10):
+        st = sched_lib.scheduler_update(st, jnp.float32(0.7), pr)
+    assert float(st.boost) == pytest.approx(sched_lib.BOOST_FLOOR)
+    # fresh improvement stops the decay without raising it back
+    st2 = sched_lib.scheduler_update(st, jnp.float32(0.9), pr)
+    assert float(st2.boost) == float(st.boost)
+    assert float(st2.best_auc) == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# engine integration: exhaustion masking + budget sweeps
+# ---------------------------------------------------------------------------
+
+ROUNDS = 12
+EVAL_EVERY = 4
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_federated(0, "unsw", n_samples=800, n_clients=6)
+
+
+@pytest.fixture(scope="module")
+def fl():
+    return FLConfig(n_clients=6, clients_per_round=3, rounds=ROUNDS,
+                    local_epochs=2, local_batch=16, local_lr=0.08,
+                    dp_enabled=True, dp_mode="clipped", dp_clip=1.0,
+                    dp_scheduled=True, fault_tolerance=True,
+                    failure_prob=0.05)
+
+
+def _single_run_params(fl, fed, budget, rounds=ROUNDS):
+    """Final params of the compiled single-lane engine at a given budget."""
+    static = fl_static(fl)
+    run = jax.jit(fl_driver._build_single_run(static, rounds, EVAL_EVERY, 16,
+                                              fed.n_classes))
+    stack, ds, dq = fl_driver._device_federation(fed)
+    pr = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
+                      fl_params(fl)._replace(dp_budget=budget))
+    params, _, trace = run(jax.random.key(0), stack, ds, dq, pr)
+    return params, trace
+
+
+def test_exhaustion_freezes_global_model_bitwise(fed, fl):
+    """A budget below the conversion floor makes every release overshoot:
+    the masked aggregation must keep the global model BITWISE at init — the
+    gate selects old params, it does not add a zero (which could still
+    flip low bits through the server optimizer)."""
+    # 0.01 < min_alpha conversion const (~0.019 at delta=1e-5): no z can fit
+    params, trace = _single_run_params(fl, fed, 0.01)
+    init = jax.jit(mlp_lib.init_mlp, static_argnums=(1, 2, 3))(
+        jax.random.fold_in(jax.random.key(0), 0), fed.n_features, 16,
+        fed.n_classes)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(init)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert np.all(np.asarray(trace["live"]) == 0.0)
+    assert np.all(np.asarray(trace["eps"]) == 0.0)  # nothing was released
+    # a longer frozen run ends at the same bits (freeze, not slow drift)
+    params20, _ = _single_run_params(fl, fed, 0.01, rounds=20)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params20)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_live_budget_moves_the_model_and_respects_budget(fed, fl):
+    params, trace = _single_run_params(fl, fed, 300.0)
+    init = jax.jit(mlp_lib.init_mlp, static_argnums=(1, 2, 3))(
+        jax.random.fold_in(jax.random.key(0), 0), fed.n_features, 16,
+        fed.n_classes)
+    assert any(bool(jnp.any(a != b)) for a, b in
+               zip(jax.tree.leaves(params), jax.tree.leaves(init)))
+    eps = np.asarray(trace["eps"])
+    assert np.all(np.diff(eps) >= -1e-6)           # spend is monotone
+    assert np.all(eps <= 300.0 * (1 + 1e-5))       # and never overshoots
+
+
+def test_budget_grid_single_compile_and_ordered_frontier(fed, fl):
+    """A (budget × schedule) grid is one compiled program; more budget ->
+    less noise; each lane's accounted ε stays within its own budget."""
+    budgets = (50.0, 200.0, 800.0, 3200.0)
+    cells = [{"dp_budget": b} for b in budgets]
+    cells.append({"dp_budget": 800.0, "dp_sched": sched_lib.schedule_code("adaptive"),
+                  "dp_stall_tol": 10.0})  # impossible tol -> always stalls
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=(0, 1),
+                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 <= 1
+    sigmas = [row[0].history["sigma"][0] for row in sweep[:4]]
+    assert all(a > b for a, b in zip(sigmas, sigmas[1:])), sigmas
+    for (cell, row) in zip(cells, sweep):
+        for r in row:
+            assert r.eps_spent <= cell["dp_budget"] * (1 + 1e-5)
+            assert r.history["eps"][-1] == r.eps_spent
+    # the always-stalling adaptive lane spends faster than uniform at the
+    # same budget: noise decays across eval blocks
+    ada = sweep[4][0].history["sigma"]
+    uni = sweep[2][0].history["sigma"]
+    assert ada[-1] < ada[0] and uni[-1] == pytest.approx(uni[0])
+    assert sweep[4][0].history["eps"][-1] >= sweep[2][0].history["eps"][-1]
+
+
+def test_unscheduled_configs_and_legacy_are_unchanged(fed, fl):
+    """dp_scheduled=False must keep the PR 2 behaviour: host closed-form ε,
+    no eps/sigma history columns; the legacy loop refuses scheduled
+    configs loudly."""
+    plain = dataclasses.replace(fl, dp_scheduled=False, dp_epsilon=200.0)
+    r = fl_driver.run_fl(fed, plain, seed=0, rounds=6, eval_every=3)
+    assert "eps" not in r.history and "sigma" not in r.history
+    assert r.eps_spent == pytest.approx(
+        acct_lib.accounted_epsilon(dataclasses.replace(
+            plain, selection="adaptive_utility"), 6))
+    with pytest.raises(ValueError, match="dp_scheduled"):
+        fl_driver.run_fl_legacy(fed, fl, seed=0, rounds=4)
+    with pytest.raises(ValueError, match="in-scan accountant"):
+        acct_lib.accounted_epsilon(fl, 4)
+
+
+def test_scheduled_requires_clipped_mode(fed, fl):
+    """dp_scheduled + dp_mode='paper' would certify an (ε, δ) guarantee
+    for an UNCLIPPED mechanism (unbounded sensitivity) — the engine must
+    refuse rather than report a mathematically false ε."""
+    bad = dataclasses.replace(fl, dp_mode="paper")
+    with pytest.raises(ValueError, match="clipped"):
+        fl_driver.run_fl(fed, bad, seed=0, rounds=4, eval_every=2)
+
+
+def test_spent_epsilon_deprecated_alias(fed, fl):
+    plain = dataclasses.replace(fl, dp_scheduled=False)
+    with pytest.warns(DeprecationWarning):
+        eps = fl_driver.spent_epsilon(plain, 10)
+    assert eps == pytest.approx(acct_lib.accounted_epsilon(plain, 10))

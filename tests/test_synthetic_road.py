@@ -1,0 +1,57 @@
+"""Vectorised ``road_like`` vs the per-window loop oracle (ISSUE 3
+satellite): the batched generator must be a *statistical* drop-in — the
+two draw the RNG in different orders, so equality is distributional, not
+sample-for-sample.
+"""
+import numpy as np
+
+from repro.data.synthetic import _road_like_loop, road_like
+
+N = 1_500
+
+
+def test_road_like_matches_loop_oracle_statistically():
+    Xv, yv, _ = road_like(np.random.default_rng(0), N)
+    Xl, yl, _ = _road_like_loop(np.random.default_rng(1), N)
+    assert Xv.shape == Xl.shape == (N, 30)
+    assert abs(float(yv.mean()) - float(yl.mean())) < 0.05
+
+    # standardisation contract: zero mean; unit variance except the one
+    # constant feature (c0 of signal 0 is 1.0 by definition in BOTH
+    # generators, so its standardised column is identically 0)
+    for X in (Xv, Xl):
+        np.testing.assert_allclose(X.mean(0), 0.0, atol=1e-5)
+        std = X.std(0)
+        assert np.all((np.abs(std - 1.0) < 1e-3) | (std < 1e-6))
+        assert (std < 1e-6).sum() == 1
+
+    # class-conditional feature means agree (units of feature σ; the max
+    # over 30 features of two independent ~N(0, 2/n_cls) samples stays well
+    # under 0.3 — looseness is sampling noise, not generator drift)
+    for cls in (0, 1):
+        d = np.abs(Xv[yv == cls].mean(0) - Xl[yl == cls].mean(0))
+        assert d.max() < 0.3, (cls, d.max())
+        assert d.mean() < 0.1, (cls, d.mean())
+
+
+def test_road_like_attack_signature_preserved():
+    """The masquerade must stay detectable-but-subtle in the vectorised
+    generator exactly as in the oracle (same check as test_substrate's)."""
+    rng = np.random.default_rng(0)
+    X, y, _ = road_like(rng, 400)
+    d = np.abs(X[y == 1].mean(0) - X[y == 0].mean(0))
+    assert d.max() > 0.1
+
+
+def test_road_like_deterministic_per_seed():
+    X1, y1, _ = road_like(np.random.default_rng(7), 200)
+    X2, y2, _ = road_like(np.random.default_rng(7), 200)
+    np.testing.assert_array_equal(X1, X2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_road_like_handles_all_normal_and_all_attack():
+    X0, y0, _ = road_like(np.random.default_rng(3), 64, attack_rate=0.0)
+    assert y0.sum() == 0 and np.isfinite(X0).all()
+    X1, y1, _ = road_like(np.random.default_rng(3), 64, attack_rate=1.0)
+    assert y1.sum() == 64 and np.isfinite(X1).all()
