@@ -1,0 +1,163 @@
+"""Model-diversity benchmark (ISSUE 4): the pluggable-detector engine.
+
+A model × seed grid on both workload families, written to
+``BENCH_models.json`` at the repo root:
+
+* ``unsw`` — the paper's tabular flow features (flattened MLP);
+* ``road_raw`` — raw CAN windows (``feature_shape=(window, signals)``):
+  the flattened MLP baseline vs the window-native detectors
+  (``models/detectors.py``: 1-D CNN + RG-LRU recurrent).
+
+Hard assertions:
+
+* **one compile per model static** — every (dataset, model) cell's seed
+  batch is one ``_get_runner`` miss (RUNNER_STATS), rerunning a cell is
+  zero misses: ``FLConfig.model`` rides the statics key exactly like
+  ``selection``/``plan``;
+* **window-native wins on windows** — on ``road_raw`` the best
+  window-native detector's mean AUC must match or beat the flattened
+  MLP's (the structure the MLP destroys is the ROAD signal; gated in full
+  mode, recorded always).
+
+Timing protocol (repo memory: very noisy wall clocks): per-cell walls are
+warm min-of-N via ``benchmarks/common.warm_min`` — compile happens before
+any timed call, and cold compile seconds are recorded separately,
+unaudited.
+
+``REPRO_MODELS_SMOKE=1`` shrinks the grid and skips the AUC gate
+(correctness/compile-count assertions stay on).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.train import fl_driver
+
+from benchmarks import common
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_models.json")
+
+# Sizing note: the window-native detectors cost real CPU (conv /
+# associative-scan over 64-step windows, vmapped over clients); the grid is
+# sized so the full run stays in CPU-minutes while leaving enough total
+# local steps (rounds × local_epochs) for the architectures to separate.
+SMOKE = os.environ.get("REPRO_MODELS_SMOKE", "0") == "1"
+N_CLIENTS = 8 if SMOKE else 12
+N_SAMPLES = 1_000 if SMOKE else 2_400
+ROUNDS = 8 if SMOKE else 40
+SEEDS = (0, 1) if SMOKE else (0, 1, 2)
+EVAL_EVERY = 4 if SMOKE else 10
+WARM_N = 1 if SMOKE else 2
+
+# (dataset, model) grid: the MLP baseline runs on both workloads, the
+# window-native detectors only on raw windows (they reject tabular meta).
+GRID = (
+    ("unsw", "mlp"),
+    ("road_raw", "mlp"),
+    ("road_raw", "cnn"),
+    ("road_raw", "rglru"),
+)
+
+
+def _bench_fl(**kw) -> FLConfig:
+    return FLConfig(
+        n_clients=N_CLIENTS, clients_per_round=4, rounds=ROUNDS,
+        local_epochs=3, local_batch=32, local_lr=0.1,
+        dp_enabled=True, dp_mode="clipped", dp_epsilon=1000.0, dp_clip=1.0,
+        fault_tolerance=True, failure_prob=0.05, **kw)
+
+
+def run(csv_rows: list) -> dict:
+    mode = "smoke" if SMOKE else "full"
+    print(f"\n== Models: pluggable-detector grid ({mode}) ==")
+    feds = {ds: make_federated(0, ds, n_samples=N_SAMPLES,
+                               n_clients=N_CLIENTS)
+            for ds in {ds for ds, _ in GRID}}
+
+    fl_driver._RUNNER_CACHE.clear()
+    cells = []
+    for ds, model in GRID:
+        cfg = _bench_fl(model=model)
+        fed = feds[ds]
+        m0 = fl_driver.RUNNER_STATS["misses"]
+        t0 = time.time()
+        res = fl_driver.run_fl_batch(fed, cfg, "proposed", seeds=SEEDS,
+                                     rounds=ROUNDS, eval_every=EVAL_EVERY)
+        cold_s = time.time() - t0
+        misses = fl_driver.RUNNER_STATS["misses"] - m0
+        assert misses == 1, (
+            f"({ds}, {model}): expected exactly one compile for the seed "
+            f"batch, got {misses}")
+
+        def warm_call(fed=fed, cfg=cfg):
+            fl_driver.run_fl_batch(fed, cfg, "proposed", seeds=SEEDS,
+                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
+
+        m1 = fl_driver.RUNNER_STATS["misses"]
+        warm_s, walls = common.warm_min(warm_call, WARM_N)
+        assert fl_driver.RUNNER_STATS["misses"] == m1, (
+            f"({ds}, {model}): warm reruns must be pure cache hits")
+
+        cell = {
+            "dataset": ds,
+            "model": model,
+            "auc_mean": float(np.mean([r.auc for r in res])),
+            "auc_per_seed": [float(r.auc) for r in res],
+            "acc_mean": float(np.mean([r.accuracy for r in res])),
+            "eps_spent": float(res[0].eps_spent),
+            "cold_s_unaudited": cold_s,
+            "warm_execute_s_min": warm_s,
+            "warm_execute_s_all": walls,
+            "runner_compiles": misses,
+        }
+        cells.append(cell)
+        print(f"  {ds:9s} {model:6s} auc={cell['auc_mean']:.3f} "
+              f"acc={cell['acc_mean']:.3f} warm={warm_s:6.2f}s "
+              f"(cold {cold_s:6.2f}s, 1 compile)")
+        csv_rows.append((f"models/{ds}/{model}", warm_s * 1e6,
+                         cell["auc_mean"]))
+
+    road = {c["model"]: c["auc_mean"] for c in cells
+            if c["dataset"] == "road_raw"}
+    best_window = max(road[m] for m in ("cnn", "rglru"))
+    auc_gate = bool(best_window >= road["mlp"] - 0.01)
+
+    report = {
+        "mode": mode,
+        "config": {"n_clients": N_CLIENTS, "rounds": ROUNDS,
+                   "seeds": list(SEEDS), "n_samples": N_SAMPLES,
+                   "warm_n": WARM_N,
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "grid": cells,
+        "road_raw_auc": {"mlp_flattened": road["mlp"],
+                         "best_window_native": best_window,
+                         "window_native_matches_or_beats_mlp": auc_gate,
+                         "gated": not SMOKE},
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+
+    print(f"  road_raw: best window-native auc {best_window:.3f} vs "
+          f"flattened mlp {road['mlp']:.3f} -> "
+          f"{'OK' if auc_gate else 'FAIL'}"
+          f"{' (not gated in smoke)' if SMOKE else ''}")
+    print(f"  -> {os.path.abspath(OUT)}")
+    return report
+
+
+if __name__ == "__main__":
+    report = run([])
+    if report["road_raw_auc"]["gated"] and \
+            not report["road_raw_auc"]["window_native_matches_or_beats_mlp"]:
+        raise SystemExit(
+            "models gate failed: no window-native detector matched the "
+            "flattened MLP's AUC on road_raw")

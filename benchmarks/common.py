@@ -32,7 +32,8 @@ FULL = os.environ.get("REPRO_FULL", "0") == "1"
 N_CLIENTS = 40 if FULL else 24
 ROUNDS = 200 if FULL else 50
 N_SEEDS = 10 if FULL else 5
-N_SAMPLES = {"unsw": 20_000 if FULL else 8_000, "road": 5_000 if FULL else 2_400}
+N_SAMPLES = {"unsw": 20_000 if FULL else 8_000, "road": 5_000 if FULL else 2_400,
+             "road_raw": 5_000 if FULL else 2_400}
 
 
 def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
@@ -63,8 +64,13 @@ def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
 # "sweep2": runtime FLParams — the DP noise scale is now derived from
 # traced f32 scalars on device instead of a host f64 constant; "privacy3":
 # road_like was vectorised, changing its RNG draw order — road federations
-# differ sample-for-sample from the loop generator's).
-ENGINE_REV = "privacy3"
+# differ sample-for-sample from the loop generator's; "models4": the two
+# ISSUE-4 bugfixes change trajectories — adaptive-K no longer shrinks on
+# round 1 (every adaptive_k cell's selection stream moves) and scheduled
+# runs account ε at the realised ceil(k_eff)/n cohort fraction.  The
+# ModelSpec refactor itself is bitwise-neutral for mlp lanes
+# (tests/test_models.py).
+ENGINE_REV = "models4"
 
 
 def warm_min(fn: Callable[[], object], n: int) -> Tuple[float, List[float]]:

@@ -200,6 +200,12 @@ class FLConfig:
       config to its static part for program-cache keying.
     """
 
+    # detector architecture (STATIC): a name in the models/spec.py registry
+    # ("mlp" — the paper's flattened MLP — plus the window-native ROAD
+    # detectors "cnn"/"rglru").  Part of the runner-cache statics key, so
+    # each architecture compiles once and a model grid shares the sweep
+    # machinery like any other static split.
+    model: str = "mlp"
     n_clients: int = 40
     clients_per_round: int = 8          # K (initial value when adaptive)
     adaptive_k: bool = True

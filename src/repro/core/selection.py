@@ -199,7 +199,12 @@ def update_k(state: KControllerState, global_loss, fl: FLConfig,
     plateau = jnp.where(improved, 0.0, state.plateau + 1.0)
     grow = plateau >= patience
     k = jnp.where(grow, state.k + jnp.maximum(1.0, 0.25 * state.k), state.k)
-    strong = global_loss < state.best_metric * (1.0 - 10.0 * tol)
+    # Strong-shrink needs EVIDENCE of fast improvement: best_metric starts
+    # at +inf, where `loss < inf·(1−10·tol)` is trivially true — without the
+    # finite gate the controller shrank K on round 1 having observed nothing
+    # (ISSUE 4 bugfix; regression test in tests/test_models.py).
+    strong = (jnp.isfinite(state.best_metric)
+              & (global_loss < state.best_metric * (1.0 - 10.0 * tol)))
     k = jnp.where(strong & ~grow, k - 1.0, k)
     k = jnp.clip(k, float(fl.k_min), k_max)
     return KControllerState(

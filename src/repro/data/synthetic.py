@@ -17,7 +17,7 @@ assumed by the paper ("non-IID data distribution across clients").
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +94,7 @@ def road_like(
     n_signals: int = 6,
     attack_rate: float = 0.25,
     offset: float = 0.35,
+    raw: bool = False,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Correlated-masquerade CAN windows.
 
@@ -103,6 +104,14 @@ def road_like(
     Features: per-signal (mean, std, mean |Δ|, lag-1 autocorr, corr to
     signal 0) -> 5·n_signals features.
     Returns (X, y, y) — binary labels only (matches our ROAD use).
+
+    ``raw=True`` skips the hand-engineered statistics and returns the
+    standardised window matrix itself, flattened time-major to
+    ``[n, window·n_signals]`` (reshape with ``feature_shape = (window,
+    n_signals)`` recovers ``[window, n_signals]``) — the input the
+    window-native detectors in ``models/detectors.py`` consume.  The RNG
+    draw order is identical to the feature path, so raw and feature
+    datasets of one seed describe the same windows.
 
     Fully vectorised across windows/signals (the per-window Python loop made
     this the hot spot of ``benchmarks/run.py``); only the AR(1) recursion
@@ -144,6 +153,11 @@ def road_like(
         src = (victim + rng.integers(1, n_signals, atk.size)) % n_signals
         shift = rng.integers(1, window // 4, atk.size)
         sig[atk, victim] = _roll_lastaxis(sig[atk, src], shift) + offset
+
+    if raw:
+        feats = sig.transpose(0, 2, 1).reshape(n, -1)  # time-major flatten
+        feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-9)
+        return feats.astype(np.float32), y, y
 
     # per-signal features: mean, std, mean |Δ|, lag-1 autocorr, corr to sig 0
     mean = sig.mean(-1)
@@ -203,7 +217,14 @@ def _road_like_loop(
 
 @dataclass
 class FederatedData:
-    """Per-client tabular data + metadata used by utility scores."""
+    """Per-client tabular data + metadata used by utility scores.
+
+    ``feature_shape`` is the structured shape of one example (product ==
+    ``n_features``): ``None``/``(n_features,)`` for tabular features,
+    ``(window, n_signals)`` for raw CAN windows — window-native model
+    specs (``models/spec.py``) unflatten with it while the whole data path
+    keeps moving flat ``[*, n_features]`` arrays.
+    """
 
     x: List[np.ndarray]
     y: List[np.ndarray]
@@ -211,6 +232,7 @@ class FederatedData:
     test_y: np.ndarray
     n_features: int
     n_classes: int
+    feature_shape: Optional[Tuple[int, ...]] = None
 
     @property
     def n_clients(self) -> int:
@@ -267,13 +289,24 @@ def make_federated(
     """``label_noise_frac`` of the clients get ``label_noise_rate`` of their
     labels flipped — the low-data-quality clients whose exclusion is exactly
     what the paper's utility-based selection is for (random selection keeps
-    sampling them; loss-seeking ACFL actively PREFERS them)."""
+    sampling them; loss-seeking ACFL actively PREFERS them).
+
+    ``dataset="road_raw"`` is the ROAD federation over *raw* window
+    matrices (``road_like(raw=True)``): x stays flat for the data path,
+    ``feature_shape=(window, n_signals)`` tells window-native models how to
+    unflatten."""
     rng = np.random.default_rng(seed)
+    feature_shape = None
     if dataset == "unsw":
         X, y_cat, y_bin = unsw_nb15_like(rng, n_samples)
         y = y_bin  # anomaly detection = binary task (paper metric: AUC-ROC)
     elif dataset == "road":
         X, y, _ = road_like(rng, n_samples)
+    elif dataset == "road_raw":
+        window, n_signals = 64, 6
+        X, y, _ = road_like(rng, n_samples, window=window,
+                            n_signals=n_signals, raw=True)
+        feature_shape = (window, n_signals)
     else:
         raise ValueError(dataset)
     n_test = int(len(X) * test_frac)
@@ -296,7 +329,7 @@ def make_federated(
         ys.append(yi)
     return FederatedData(
         x=xs, y=ys, test_x=X[test_i], test_y=y[test_i],
-        n_features=X.shape[1], n_classes=2,
+        n_features=X.shape[1], n_classes=2, feature_shape=feature_shape,
     )
 
 

@@ -1,0 +1,149 @@
+"""Pluggable detector architectures for the FL experiment engine (ISSUE 4).
+
+The compiled engine (``train/fl_driver.py``) used to hardcode the paper's
+flattened MLP in every model-touching site (init, loss, predict, metrics,
+personalisation).  A :class:`ModelSpec` packages exactly the surface the
+engine needs — ``init``/``loss``/``logits`` plus the derived
+``predict_proba``/``accuracy`` metrics — so any detector family can ride
+the sweep/privacy machinery unchanged (DP clip+noise and aggregation are
+already pytree-generic; ``core/rounds.py`` was always generic over
+``loss_fn``).
+
+Model choice is the STATIC ``FLConfig.model`` field: it survives
+``fl_static`` canonicalisation, so the runner cache keys on it and each
+architecture compiles exactly once per (statics, shapes) cell — a
+model × seed grid is one program per model, not per lane
+(``benchmarks/bench_models.py`` asserts this).
+
+Registry contract (``register_model``): a *builder* ``(meta: DataMeta) ->
+ModelSpec``.  Binding the dataset metadata at build time keeps the spec's
+apply functions in the engine-facing ``(params, x)`` shape — window-native
+detectors close over ``meta.feature_shape`` to unflatten the engine's flat
+feature vectors back into ``[window, signals]`` CAN windows, while the
+data path (padding, device stacking, in-scan batch sampling, lane
+sharding) stays byte-identical for every model.
+
+Builtin registry: ``mlp`` (the paper's detector, default — bitwise
+identical to the pre-spec engine, pinned by tests/test_models.py) plus the
+window-native ROAD detectors in ``models/detectors.py`` (``cnn``,
+``rglru``), registered on import.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp as mlp_lib
+
+
+class DataMeta(NamedTuple):
+    """Dataset-shape metadata a model builder needs (hashable — it is part
+    of the compiled-runner cache key in ``train/fl_driver.py``).
+
+    ``feature_shape`` is the *structured* shape of one example whose
+    product equals ``n_features``: ``(n_features,)`` for tabular features,
+    ``(window, n_signals)`` for raw CAN windows
+    (``data/synthetic.make_federated(dataset="road_raw")``).  The engine
+    always moves flat ``[batch, n_features]`` arrays; window-native specs
+    reshape internally.
+    """
+
+    n_features: int
+    n_classes: int
+    hidden: int                       # generic width knob, per-spec meaning
+    feature_shape: Tuple[int, ...]
+
+    @property
+    def windowed(self) -> bool:
+        return len(self.feature_shape) > 1
+
+
+def meta_for(fed, hidden: int = 64) -> DataMeta:
+    """DataMeta of a :class:`repro.data.synthetic.FederatedData`."""
+    shape = getattr(fed, "feature_shape", None) or (fed.n_features,)
+    return DataMeta(n_features=fed.n_features, n_classes=fed.n_classes,
+                    hidden=hidden, feature_shape=tuple(int(s) for s in shape))
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    """The engine-facing surface of one detector architecture.
+
+    * ``init(key) -> params`` — fresh parameter pytree (the builder bound
+      the :class:`DataMeta`).
+    * ``loss(params, batch)`` — mean loss of ``{"x": [b, d], "y": [b]}``;
+      this is what ``core/rounds.py`` differentiates per client.
+    * ``logits(params, x) -> [b, n_classes]`` — the primitive the metrics
+      derive from.  Deriving ``accuracy`` from argmax-of-logits (not
+      argmax-of-softmax) keeps the ``mlp`` spec bitwise identical to the
+      pre-spec engine.
+    """
+
+    name: str
+    init: Callable
+    loss: Callable
+    logits: Callable
+
+    def predict_proba(self, params, x):
+        return jax.nn.softmax(self.logits(params, x), axis=-1)
+
+    def accuracy(self, params, x, y) -> jnp.ndarray:
+        pred = jnp.argmax(self.logits(params, x), axis=-1)
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def cross_entropy(logits, y):
+    """Mean CE from logits — shared by every non-MLP spec (same math as
+    ``mlp_lib.mlp_loss``)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[DataMeta], ModelSpec]] = {}
+
+
+def register_model(name: str, builder: Callable[[DataMeta], ModelSpec]):
+    """Register ``builder(meta) -> ModelSpec`` under ``name`` (the value a
+    config's ``FLConfig.model`` field takes)."""
+    _REGISTRY[name] = builder
+
+
+def model_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_model_spec(name: str, meta: DataMeta) -> ModelSpec:
+    """Resolve a registered architecture against a dataset's metadata."""
+    try:
+        builder = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown FLConfig.model {name!r}; registered: {model_names()}"
+        ) from None
+    return builder(meta)
+
+
+def _build_mlp(meta: DataMeta) -> ModelSpec:
+    """The paper's flattened-feature MLP — wired straight to ``models/mlp``
+    so the spec path is the pre-refactor math, function for function."""
+    return ModelSpec(
+        name="mlp",
+        init=lambda key: mlp_lib.init_mlp(key, meta.n_features, meta.hidden,
+                                          meta.n_classes),
+        loss=mlp_lib.mlp_loss,
+        logits=mlp_lib.mlp_logits,
+    )
+
+
+register_model("mlp", _build_mlp)
+
+# Window-native ROAD detectors self-register on import.
+from repro.models import detectors as _detectors  # noqa: E402,F401

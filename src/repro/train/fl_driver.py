@@ -1,9 +1,16 @@
 """End-to-end FL driver for the anomaly-detection use case (paper §V).
 
 Runs the full Algorithm-1 loop on the (synthetic stand-in) UNSW-NB15 / ROAD
-federations with the paper's detector MLP, producing the metrics the paper
-reports: accuracy, AUC-ROC and (simulated) training time, for our method and
-the baselines.
+federations, producing the metrics the paper reports: accuracy, AUC-ROC and
+(simulated) training time, for our method and the baselines.
+
+The detector architecture is pluggable (ISSUE 4): every model-touching
+site — init, per-client loss, test-set prediction, metrics, FedL2P
+personalisation — goes through the :class:`~repro.models.spec.ModelSpec`
+resolved from the STATIC ``FLConfig.model`` field (``mlp`` — the paper's
+detector, default — or the window-native ROAD detectors ``cnn``/``rglru``).
+Model choice rides the runner-cache statics key, so each architecture
+compiles once and shares the sweep/privacy machinery unchanged.
 
 Methods:
   proposed        — adaptive utility selection + DP + fault tolerance (ours)
@@ -65,7 +72,8 @@ from repro.core import rounds as rounds_lib
 from repro.data.synthetic import (FederatedData, StackedFederation,
                                   round_batches, sample_round_batches,
                                   stack_federation)
-from repro.models import mlp as mlp_lib
+from repro.models.mlp import auc_roc, auc_roc_jnp
+from repro.models.spec import DataMeta, ModelSpec, get_model_spec, meta_for
 from repro.privacy import accountant as acct_lib
 from repro.privacy import schedule as sched_lib
 from repro.privacy.accountant import accounted_epsilon
@@ -118,12 +126,14 @@ class RunResult:
         return float("inf")
 
 
-def _personalize(params, fed: FederatedData, steps: int = 3, lr: float = 0.05,
+def _personalize(params, fed: FederatedData, spec: ModelSpec,
+                 steps: int = 3, lr: float = 0.05,
                  batch: int = 64, seed: int = 0):
     """FedL2P-lite personalisation: a few local fine-tune steps per client;
-    returns the average personalised test metrics."""
+    returns the average personalised test metrics.  Model-generic: the
+    fine-tune gradient and the test metrics come from the ``spec``."""
     rng = np.random.default_rng(seed)
-    grad_fn = jax.jit(jax.grad(mlp_lib.mlp_loss))
+    grad_fn = jax.jit(jax.grad(spec.loss))
     accs, scores_all = [], []
     for ci in range(fed.n_clients):
         p = params
@@ -132,12 +142,12 @@ def _personalize(params, fed: FederatedData, steps: int = 3, lr: float = 0.05,
             b = {"x": jnp.asarray(fed.x[ci][idx]), "y": jnp.asarray(fed.y[ci][idx])}
             g = grad_fn(p, b)
             p = jax.tree.map(lambda a, gg: a - lr * gg, p, g)
-        proba = mlp_lib.mlp_predict_proba(p, jnp.asarray(fed.test_x))[:, 1]
-        accs.append(float(mlp_lib.accuracy(p, jnp.asarray(fed.test_x),
-                                           jnp.asarray(fed.test_y))))
+        proba = spec.predict_proba(p, jnp.asarray(fed.test_x))[:, 1]
+        accs.append(float(spec.accuracy(p, jnp.asarray(fed.test_x),
+                                        jnp.asarray(fed.test_y))))
         scores_all.append(np.asarray(proba))
     acc = float(np.mean(accs))
-    auc = mlp_lib.auc_roc(np.mean(scores_all, axis=0), fed.test_y)
+    auc = auc_roc(np.mean(scores_all, axis=0), fed.test_y)
     return acc, auc
 
 
@@ -198,8 +208,21 @@ def _eval_rounds(rounds: int, eval_every: int) -> List[int]:
             if (r + 1) % eval_every == 0 or r == rounds - 1]
 
 
-def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
-                      n_classes: int):
+def realized_cohort_fraction(k_eff, n_clients: int):
+    """Sampling fraction the RDP accountant must compose at.
+
+    ``_topk_mask`` selects every rank strictly below ``k_eff`` — for a
+    fractional controller K (adaptive-K grow steps produce e.g. 7.75) that
+    is ``ceil(k_eff)`` clients, so composing at ``k_eff/n`` systematically
+    under-accounted ε (ISSUE 4 bugfix).  ``ceil(k_eff)/n`` is the realised
+    cohort's fraction; availability masking can only select *fewer*
+    clients, so this never understates the spend.
+    """
+    return jnp.clip(jnp.ceil(k_eff) / n_clients, 0.0, 1.0)
+
+
+def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
+                      meta: DataMeta):
     """``single_run(key, stack, data_size, data_quality, params) ->
     (final_params, sim_time, eval trace)``, a pure function of the seed key,
     the (runtime-argument) federation and the runtime :class:`FLParams`.
@@ -207,7 +230,11 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     ``fl`` here is the STATIC config (the caller canonicalises with
     ``fl_static``): every scalar hyper-parameter the round step consumes
     comes from ``params``, so vmapping this function over stacked FLParams
-    lanes sweeps a whole hyper-parameter grid inside one program.
+    lanes sweeps a whole hyper-parameter grid inside one program.  The
+    detector architecture is the spec resolved from the STATIC
+    ``fl.model`` against ``meta`` (models/spec.py) — init, per-client
+    loss and the eval metrics all come from it, so a new architecture is
+    a registry entry, not an engine change.
 
     Structure: a NESTED scan.  The inner ``lax.scan`` advances ``eval_every``
     rounds carrying (RoundState, data key, cumulative simulated time); the
@@ -222,8 +249,10 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     :class:`~repro.privacy.accountant.AccountantState` and a
     :class:`~repro.privacy.schedule.SchedulerState`.  Every round the
     scheduler emits σ_t, the accountant tentatively composes the release at
-    the CURRENT cohort fraction q_t = k_eff/n (adaptive K changes the
-    subsampling amplification, and the accountant sees it), and a release
+    the REALISED cohort fraction q_t = ceil(k_eff)/n (adaptive K changes
+    the subsampling amplification and the accountant sees it; the top-k
+    mask selects ceil of the controller's fractional K — see
+    :func:`realized_cohort_fraction`), and a release
     that would push ε past ``pr.dp_budget`` is withheld via the round
     step's ``update_gate`` — the global model freezes bitwise at budget
     exhaustion.  ε is converted from the carried RDP curve on eval
@@ -241,12 +270,12 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
             "dp_clip — the paper's unclipped fixed-sigma mode has "
             "unbounded sensitivity")
 
+    spec = get_model_spec(fl.model, meta)
+
     def single_run(key, stack: StackedFederation, data_size, data_quality,
                    pr: FLParams):
         n_clients = stack.n_clients
-        n_features = stack.x.shape[-1]
-        round_step = rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl,
-                                                    n_clients)
+        round_step = rounds_lib.make_parallel_round(spec.loss, fl, n_clients)
         tx, ty = stack.test_x, stack.test_y
         k_static = jnp.asarray(float(fl.clients_per_round), jnp.float32)
 
@@ -260,7 +289,9 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
                                            fl.local_batch)
             if scheduled:
                 k_eff = state.kctl.k if fl.adaptive_k else k_static
-                q_t = jnp.clip(k_eff / n_clients, 0.0, 1.0)
+                # compose at the REALISED cohort fraction — _topk_mask
+                # selects ceil(k_eff) clients, not k_eff (ISSUE 4 bugfix)
+                q_t = realized_cohort_fraction(k_eff, n_clients)
                 z_t = sched_lib.scheduled_multiplier(sched, pr,
                                                      state.round_idx, rounds)
                 sigma_t = z_t * pr.dp_clip
@@ -292,9 +323,9 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
             else:
                 state, _, cum_time = carry
                 losses, ks = ys
-            acc = mlp_lib.accuracy(state.params, tx, ty)
-            proba = mlp_lib.mlp_predict_proba(state.params, tx)[:, 1]
-            auc = mlp_lib.auc_roc_jnp(proba, ty)
+            acc = spec.accuracy(state.params, tx, ty)
+            proba = spec.predict_proba(state.params, tx)[:, 1]
+            auc = auc_roc_jnp(proba, ty)
             trace = {
                 "loss": losses[-1],
                 "acc": acc,
@@ -310,8 +341,7 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
                 carry = (state, data_key, cum_time, acct, sched)
             return carry, trace
 
-        params = mlp_lib.init_mlp(jax.random.fold_in(key, 0), n_features,
-                                  hidden, n_classes)
+        params = spec.init(jax.random.fold_in(key, 0))
         state = rounds_lib.init_round_state(
             params, fl, jax.random.fold_in(key, 1), n_clients=n_clients,
             data_size=data_size, data_quality=data_quality,
@@ -341,11 +371,13 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
     return single_run
 
 
-# Compiled runners keyed on (STATIC config, rounds, eval_every, hidden,
-# n_classes, n_lanes, stack shapes): the federation AND every scalar
-# hyper-parameter (FLParams) are runtime arguments, so ONE program serves an
-# entire ε/failure/lr grid — one compile per (method-statics, shapes) cell,
-# not per grid point.  RUNNER_STATS counts misses/hits so tests and
+# Compiled runners keyed on (STATIC config, rounds, eval_every, DataMeta,
+# n_lanes, stack shapes): the federation AND every scalar hyper-parameter
+# (FLParams) are runtime arguments, so ONE program serves an entire
+# ε/failure/lr grid — one compile per (method-statics, shapes) cell, not
+# per grid point.  The STATIC config includes ``FLConfig.model``, so each
+# detector architecture gets its own program and a model × seed grid
+# compiles once per model.  RUNNER_STATS counts misses/hits so tests and
 # benchmarks can assert the single-compile property.
 _RUNNER_CACHE: Dict = {}
 RUNNER_STATS = {"misses": 0, "hits": 0}
@@ -371,25 +403,23 @@ def _device_federation(fed: FederatedData):
     return entry[1], entry[2], entry[3]
 
 
-def _get_runner(fl: FLConfig, rounds: int, eval_every: int, hidden: int,
-                n_classes: int, n_lanes: int, stack: StackedFederation):
+def _get_runner(fl: FLConfig, rounds: int, eval_every: int, meta: DataMeta,
+                n_lanes: int, stack: StackedFederation):
     """Compiled ``runner(keys[L], stack, data_size, data_quality,
     params_lanes[L]) -> (params[L], sim_time[L], trace[L])``.
 
-    Keyed on the STATIC config only: two configs that differ in runtime
-    knobs (ε, failure prob, lrs, ...) resolve to the same cache entry and
-    the same XLA program.  Off-CPU, the per-lane inputs (keys + FLParams)
-    are donated — they are rebuilt per call, so XLA may alias them into the
-    scan carry instead of holding both live.
+    Keyed on the STATIC config (which includes ``model``) only: two configs
+    that differ in runtime knobs (ε, failure prob, lrs, ...) resolve to the
+    same cache entry and the same XLA program.  Off-CPU, the per-lane
+    inputs (keys + FLParams) are donated — they are rebuilt per call, so
+    XLA may alias them into the scan carry instead of holding both live.
     """
     static = fl_static(fl)
-    cache_key = (static, rounds, eval_every, hidden, n_classes, n_lanes,
-                 stack.shapes())
+    cache_key = (static, rounds, eval_every, meta, n_lanes, stack.shapes())
     runner = _RUNNER_CACHE.get(cache_key)
     if runner is None:
         RUNNER_STATS["misses"] += 1
-        single_run = _build_single_run(static, rounds, eval_every, hidden,
-                                       n_classes)
+        single_run = _build_single_run(static, rounds, eval_every, meta)
         donate = () if jax.default_backend() == "cpu" else (0, 4)
         runner = jax.jit(
             jax.vmap(single_run, in_axes=(0, None, None, None, 0)),
@@ -484,9 +514,9 @@ def run_fl_sweep(
         n_padded = -(-n_lanes // sharding[0]) * sharding[0]
 
     t0 = time.time()
+    meta = meta_for(fed, hidden=hidden)
     stack, data_size, data_quality = _device_federation(fed)
-    runner = _get_runner(fl, rounds, eval_every, hidden, fed.n_classes,
-                         n_padded, stack)
+    runner = _get_runner(fl, rounds, eval_every, meta, n_padded, stack)
     keys = jax.vmap(jax.random.key)(
         jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
     lanes = _params_lanes(cells, len(seeds))
@@ -513,6 +543,9 @@ def run_fl_sweep(
     eval_idx = _eval_rounds(rounds, eval_every)
     trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
     sim_np = np.asarray(sim_b)
+    # one spec for every lane (model is static) — rebuilding per lane would
+    # defeat _personalize's jit cache for closure-built specs
+    spec = get_model_spec(fl.model, meta) if method == "fedl2p" else None
     out: List[List[RunResult]] = []
     for ci, cell in enumerate(cells):
         # fixed-σ cells: host closed-form composition (engine-independent);
@@ -531,7 +564,8 @@ def run_fl_sweep(
             if method == "fedl2p":
                 # personalisation pass (the point of FedL2P) + simulated cost
                 acc, auc = _personalize(
-                    jax.tree.map(lambda x: x[lane], params_b), fed, seed=seed)
+                    jax.tree.map(lambda x: x[lane], params_b), fed, spec,
+                    seed=seed)
                 sim_time *= 1.2
             row.append(RunResult(
                 method=method, dataset=dataset, seed=seed,
@@ -614,8 +648,8 @@ def run_fl_legacy(
     rng = np.random.default_rng(seed)
     key = jax.random.key(seed)
 
-    params = mlp_lib.init_mlp(jax.random.fold_in(key, 0), fed.n_features,
-                              hidden, fed.n_classes)
+    spec = get_model_spec(fl.model, meta_for(fed, hidden=hidden))
+    params = spec.init(jax.random.fold_in(key, 0))
     sizes = fed.data_sizes()
     state = rounds_lib.init_round_state(
         params, fl, jax.random.fold_in(key, 1), n_clients=fed.n_clients,
@@ -623,7 +657,7 @@ def run_fl_legacy(
         data_quality=jnp.asarray(fed.label_entropy()),
     )
     round_step = jax.jit(
-        rounds_lib.make_parallel_round(mlp_lib.mlp_loss, fl, fed.n_clients)
+        rounds_lib.make_parallel_round(spec.loss, fl, fed.n_clients)
     )
 
     tx, ty = jnp.asarray(fed.test_x), jnp.asarray(fed.test_y)
@@ -639,9 +673,9 @@ def run_fl_legacy(
         sim_time += float(simulate_round_time(fl, state.util, metrics.sel_mask,
                                               metrics.failed))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
-            acc = float(mlp_lib.accuracy(state.params, tx, ty))
-            proba = np.asarray(mlp_lib.mlp_predict_proba(state.params, tx)[:, 1])
-            auc = mlp_lib.auc_roc(proba, fed.test_y)
+            acc = float(spec.accuracy(state.params, tx, ty))
+            proba = np.asarray(spec.predict_proba(state.params, tx)[:, 1])
+            auc = auc_roc(proba, fed.test_y)
             history["round"].append(r + 1)
             history["loss"].append(float(metrics.global_loss))
             history["acc"].append(acc)
@@ -652,7 +686,7 @@ def run_fl_legacy(
     acc, auc = history["acc"][-1], history["auc"][-1]
     if method == "fedl2p":
         # personalisation pass (the point of FedL2P) + its simulated cost
-        acc, auc = _personalize(state.params, fed, seed=seed)
+        acc, auc = _personalize(state.params, fed, spec, seed=seed)
         sim_time *= 1.2
     eps = accounted_epsilon(fl, rounds)
 

@@ -1,0 +1,239 @@
+"""Model-pluggable engine tests (ISSUE 4).
+
+* the ``mlp`` ModelSpec is the pre-refactor wiring, function for function —
+  the load-bearing bitwise-equivalence proof: the engine consumes ONLY the
+  spec's ``init``/``loss``/``logits`` surface, so identical functions mean
+  an identical traced program;
+* per-model engine-vs-legacy equivalence on the raw-ROAD federation;
+* runner-cache statics keying: one compile per model static, zero on rerun;
+* the window-native data path (``road_raw`` + ``feature_shape``);
+* regression tests for the two ISSUE-4 bugfixes: adaptive-K first-round
+  shrink (``core/selection.update_k``) and fractional-K privacy
+  under-accounting (the accountant's q must match the realised selection
+  count, ``ceil(k_eff)``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, fl_static
+from repro.core import selection as sel_lib
+from repro.data.synthetic import make_federated, road_like
+from repro.models import mlp as mlp_lib
+from repro.models.spec import (DataMeta, get_model_spec, meta_for,
+                               model_names)
+from repro.train import fl_driver
+from repro.train.fl_driver import realized_cohort_fraction
+
+ROUNDS = 10
+EVAL_EVERY = 5
+
+
+@pytest.fixture(scope="module")
+def fed_road():
+    return make_federated(0, "road_raw", n_samples=900, n_clients=8)
+
+
+@pytest.fixture(scope="module")
+def fl():
+    return FLConfig(n_clients=8, clients_per_round=3, rounds=ROUNDS,
+                    local_epochs=2, local_batch=16, local_lr=0.08,
+                    dp_enabled=True, dp_mode="clipped", dp_epsilon=200.0,
+                    dp_clip=5.0, fault_tolerance=True, failure_prob=0.05)
+
+
+# ---------------------------------------------------------------------------
+# registry + spec contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_builtin_models():
+    assert set(model_names()) >= {"mlp", "cnn", "rglru"}
+    with pytest.raises(KeyError, match="unknown FLConfig.model"):
+        get_model_spec("no_such_model", DataMeta(4, 2, 8, (4,)))
+
+
+def test_window_models_reject_tabular_meta():
+    tab = DataMeta(n_features=42, n_classes=2, hidden=64,
+                   feature_shape=(42,))
+    for name in ("cnn", "rglru"):
+        with pytest.raises(ValueError, match="window-native"):
+            get_model_spec(name, tab)
+
+
+def test_mlp_spec_is_prerefactor_wiring_bitwise(fed_road):
+    """The engine consumes only ``spec.init``/``loss``/``logits`` (plus the
+    metrics derived from ``logits``).  For ``model='mlp'`` those must be the
+    exact pre-refactor computations: ``loss``/``logits`` the SAME function
+    objects the engine used to close over, ``init`` bitwise equal to
+    ``init_mlp``, and the derived metrics bitwise equal to models/mlp's —
+    identical inputs to ``make_parallel_round`` + identical eval math is an
+    identical traced program, i.e. pre/post-refactor bitwise equality."""
+    fed = make_federated(3, "unsw", n_samples=600, n_clients=6)
+    meta = meta_for(fed, hidden=48)
+    spec = get_model_spec("mlp", meta)
+    assert spec.loss is mlp_lib.mlp_loss
+    assert spec.logits is mlp_lib.mlp_logits
+
+    key = jax.random.key(11)
+    a = spec.init(key)
+    b = mlp_lib.init_mlp(key, fed.n_features, 48, fed.n_classes)
+    assert jax.tree.structure(a) == jax.tree.structure(b)
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    x = jnp.asarray(fed.test_x[:64])
+    y = jnp.asarray(fed.test_y[:64])
+    np.testing.assert_array_equal(
+        np.asarray(spec.accuracy(a, x, y)),
+        np.asarray(mlp_lib.accuracy(b, x, y)))
+    np.testing.assert_array_equal(
+        np.asarray(spec.predict_proba(a, x)),
+        np.asarray(mlp_lib.mlp_predict_proba(b, x)))
+
+
+def test_default_model_lane_is_explicit_mlp_lane(fed_road, fl):
+    """``FLConfig.model`` defaults to ``mlp``: a config that never mentions
+    the field and one that sets it explicitly are the same static cell and
+    produce identical histories."""
+    explicit = dataclasses.replace(fl, model="mlp")
+    assert fl_static(explicit) == fl_static(fl)
+    a = fl_driver.run_fl(fed_road, fl, "proposed", seed=2, rounds=6,
+                         eval_every=3)
+    b = fl_driver.run_fl(fed_road, explicit, "proposed", seed=2, rounds=6,
+                         eval_every=3)
+    assert a.history == b.history
+
+
+# ---------------------------------------------------------------------------
+# per-model engine vs legacy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn", "rglru"])
+def test_engine_matches_legacy_per_model(fed_road, fl, model):
+    """The scanned engine and the legacy loop draw independent batch
+    streams, so metrics agree statistically; ε, the eval grid and the
+    history schema must agree exactly — for every registered model."""
+    cfg = dataclasses.replace(fl, model=model)
+    legacy = fl_driver.run_fl_legacy(fed_road, cfg, "proposed", seed=0,
+                                     rounds=ROUNDS, eval_every=EVAL_EVERY)
+    scan = fl_driver.run_fl(fed_road, cfg, "proposed", seed=0,
+                            rounds=ROUNDS, eval_every=EVAL_EVERY)
+    assert scan.eps_spent == pytest.approx(legacy.eps_spent, abs=1e-6)
+    assert scan.history["round"] == legacy.history["round"]
+    assert set(scan.history) == set(legacy.history)
+    assert abs(scan.accuracy - legacy.accuracy) <= 0.25
+    assert np.all(np.diff(scan.history["cum_time"]) >= 0)
+
+
+# ---------------------------------------------------------------------------
+# runner-cache statics keying
+# ---------------------------------------------------------------------------
+
+
+def test_one_compile_per_model_static(fed_road, fl):
+    """A model grid compiles once per architecture: N models -> N misses,
+    rerunning any of them -> pure cache hits."""
+    models = ("mlp", "cnn", "rglru")
+    cfgs = [dataclasses.replace(fl, model=m) for m in models]
+    for c in cfgs:  # warm every model's runner
+        fl_driver.run_fl_batch(fed_road, c, "proposed", seeds=(0, 1),
+                               rounds=6, eval_every=3)
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    h0 = fl_driver.RUNNER_STATS["hits"]
+    for c in cfgs:
+        fl_driver.run_fl_batch(fed_road, c, "proposed", seeds=(0, 1),
+                               rounds=6, eval_every=3)
+    assert fl_driver.RUNNER_STATS["misses"] == m0, \
+        "rerunning a model grid must not recompile"
+    assert fl_driver.RUNNER_STATS["hits"] == h0 + len(models)
+    # a model the cache has not seen at these shapes is a genuine miss
+    fl_driver.run_fl_batch(fed_road, cfgs[1], "proposed", seeds=(0, 1),
+                           rounds=7, eval_every=3)
+    assert fl_driver.RUNNER_STATS["misses"] == m0 + 1
+
+
+def test_sweep_rejects_model_mismatch(fed_road, fl):
+    """model is STATIC — it cannot ride the runtime lane axis."""
+    bad = dataclasses.replace(fl, model="cnn")
+    with pytest.raises(ValueError, match="STATIC"):
+        fl_driver.run_fl_sweep(fed_road, fl, [fl, bad], seeds=(0,), rounds=4)
+
+
+# ---------------------------------------------------------------------------
+# window-native data path
+# ---------------------------------------------------------------------------
+
+
+def test_road_raw_feature_shape_roundtrip():
+    fed = make_federated(1, "road_raw", n_samples=300, n_clients=4)
+    assert fed.feature_shape == (64, 6)
+    assert int(np.prod(fed.feature_shape)) == fed.n_features == 384
+    # unflattening recovers time-major windows: feature j of signal s at
+    # time t sits at flat index t * n_signals + s
+    x = fed.test_x[:5].reshape(5, 64, 6)
+    np.testing.assert_array_equal(x[:, 3, 2], fed.test_x[:5][:, 3 * 6 + 2])
+
+
+def test_road_raw_same_windows_as_feature_path():
+    """raw=True must not perturb the RNG draw order: the labels (drawn
+    first) of the raw and feature datasets of one seed are identical."""
+    _, y_raw, _ = road_like(np.random.default_rng(7), 200, raw=True)
+    _, y_feat, _ = road_like(np.random.default_rng(7), 200)
+    np.testing.assert_array_equal(y_raw, y_feat)
+
+
+# ---------------------------------------------------------------------------
+# bugfix regressions (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+
+def test_update_k_does_not_shrink_on_round_one():
+    """best_metric initialises to +inf; the strong-shrink branch used to
+    fire against it (loss < inf is trivially true) and drop K 8→7 with zero
+    evidence.  One update from a fresh state must keep K."""
+    fl = FLConfig(n_clients=20, clients_per_round=8)
+    st = sel_lib.init_k_state(fl)
+    st1 = sel_lib.update_k(st, jnp.asarray(0.7, jnp.float32), fl)
+    assert float(st1.k) == 8.0
+    # ...and the controller still shrinks on GENUINE strong improvement
+    st2 = sel_lib.update_k(st1, jnp.asarray(0.3, jnp.float32), fl)
+    assert float(st2.k) == 7.0
+    # ...and still grows on a plateau
+    stp = st1
+    for _ in range(int(fl.k_patience)):
+        stp = sel_lib.update_k(stp, jnp.asarray(0.7, jnp.float32), fl)
+    assert float(stp.k) > 8.0
+
+
+def test_accountant_q_pinned_to_realised_selection_count():
+    """The scheduled path used to feed the accountant q = k_eff/n with the
+    controller's FRACTIONAL k while ``_topk_mask`` (ranks < k_eff) selected
+    ceil(k_eff) clients — systematic ε under-accounting.  Pin q to the
+    realised count for fractional and integer K."""
+    n = 20
+    avail = jnp.ones((n,), jnp.float32)
+    scores = jnp.arange(n, dtype=jnp.float32)
+    for k_eff in (7.75, 5.25, 8.0, 1.0):
+        mask = sel_lib._topk_mask(scores, avail, jnp.asarray(k_eff), n)
+        selected = int(mask.sum())
+        assert selected == int(np.ceil(k_eff))
+        q = float(realized_cohort_fraction(jnp.asarray(k_eff), n))
+        assert q == pytest.approx(selected / n, abs=1e-7)
+
+
+def test_fractional_q_accounts_more_epsilon():
+    """ε composed at the realised ceil(k)/n must exceed the old fractional
+    k/n accounting — the fix can only report MORE spend, never less."""
+    from repro.privacy import accountant as acct
+
+    n, k_frac, z, rounds, delta = 20, 7.75, 1.5, 50, 1e-5
+    eps_old = acct.compose_epsilon(z, k_frac / n, rounds, delta)
+    eps_fix = acct.compose_epsilon(
+        z, float(realized_cohort_fraction(jnp.asarray(k_frac), n)),
+        rounds, delta)
+    assert eps_fix > eps_old

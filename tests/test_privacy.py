@@ -195,9 +195,11 @@ def fl():
 
 def _single_run_params(fl, fed, budget, rounds=ROUNDS):
     """Final params of the compiled single-lane engine at a given budget."""
+    from repro.models.spec import meta_for
+
     static = fl_static(fl)
-    run = jax.jit(fl_driver._build_single_run(static, rounds, EVAL_EVERY, 16,
-                                              fed.n_classes))
+    run = jax.jit(fl_driver._build_single_run(static, rounds, EVAL_EVERY,
+                                              meta_for(fed, hidden=16)))
     stack, ds, dq = fl_driver._device_federation(fed)
     pr = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32),
                       fl_params(fl)._replace(dp_budget=budget))
