@@ -15,9 +15,9 @@ any runtime grid — share it.  EXPERIMENTS.md §Sweeps).
 from __future__ import annotations
 
 import numpy as np
-from scipy import stats
 
 from benchmarks.common import run_grid
+from repro.stats import mannwhitney_greater
 
 DATASETS = ("unsw", "road")
 BASELINES = ("acfl", "fedl2p")
@@ -45,8 +45,7 @@ def run(csv_rows: list):
             a = _samples(rows, "proposed", ds, metric)
             for b_name in BASELINES:
                 b = _samples(rows, b_name, ds, metric)
-                u, p = stats.mannwhitneyu(a, b, alternative="greater")
-                sig = bool(p < 0.05)
+                u, p, sig = mannwhitney_greater(a, b)
                 if metric == "acc":
                     acc_all_sig &= sig
                 print(f"{ds:8s} proposed vs {b_name:10s} {metric:6s} {u:9.1f} "

@@ -9,6 +9,8 @@ the human-readable tables stream as each section runs.
            (writes BENCH_sweep.json at the repo root)
   privacy— ε-vs-AUC budget frontier (adaptive scheduling, one program)
            + accountant overhead (writes BENCH_privacy.json)
+  fault  — failure-process frontier (iid/markov/weibull/straggler × rate,
+           one program) + FT robustness gate (writes BENCH_fault.json)
   models — pluggable-detector grid: flattened MLP vs window-native CNN /
            RG-LRU on raw ROAD windows (writes BENCH_models.json)
   table1 — method comparison (paper Table I)
@@ -77,13 +79,14 @@ def main() -> None:
     csv_rows = []
     t0 = time.time()
 
-    from benchmarks import (bench_engine, bench_models, bench_privacy,
-                            bench_sweep, bench_table1, bench_table2,
-                            bench_table3, bench_fig3)
+    from benchmarks import (bench_engine, bench_fault, bench_models,
+                            bench_privacy, bench_sweep, bench_table1,
+                            bench_table2, bench_table3, bench_fig3)
 
     bench_engine.run(csv_rows)
     bench_sweep.run(csv_rows)
     bench_privacy.run(csv_rows)
+    bench_fault.run(csv_rows)
     bench_models.run(csv_rows)
     bench_table1.run(csv_rows)
     bench_table2.run(csv_rows)

@@ -69,15 +69,15 @@ def main():
               f"auc={np.mean(aucs):.3f} time(sim)={np.mean(ts):6.1f}s "
               f"eps_spent={per_seed[0].eps_spent:.1f}")
 
-    # significance (paper Table III)
-    from scipy import stats
+    # significance (paper Table III) — shared helper, repro/stats.py
+    from repro.stats import mannwhitney_greater
 
     a = [x for r in results["proposed"] for x in r.history["auc"][-3:]]
     for base in ("acfl", "fedl2p"):
         b = [x for r in results[base] for x in r.history["auc"][-3:]]
-        u, p = stats.mannwhitneyu(a, b, alternative="greater")
+        u, p, sig = mannwhitney_greater(a, b)
         print(f"  Mann-Whitney proposed vs {base}: U={u:.0f} p={p:.2e} "
-              f"{'(significant)' if p < 0.05 else '(ns)'}")
+              f"{'(significant)' if sig else '(ns)'}")
 
     # demonstrate checkpoint save/restore round-trip on the final model
     with tempfile.TemporaryDirectory() as d:

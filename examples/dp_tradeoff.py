@@ -15,7 +15,7 @@ Shows (all ε figures via the privacy subsystem's RDP accountant,
      (examples/privacy_frontier.py),
   4. the sweep engine: the whole ε grid of (1) as ONE compiled program —
      ε is a runtime FLParams lane, so N budgets cost one compile
-     (``run_fl_sweep``; docs/ARCHITECTURE.md §Sweeps).
+     (``run_fl_sweep``; EXPERIMENTS.md §Sweeps).
 
 Run:  PYTHONPATH=src python examples/dp_tradeoff.py
 """

@@ -5,9 +5,14 @@ Shows:
      curve — including the degeneracy of the paper's literal C(t_c) and the
      corrected renewal model (core/fault.py docstring),
   2. fitting (λ, k) from simulated historical failure data,
-  3. FL runs at increasing failure rates with and without fault tolerance —
-     the robustness argument of Table II,
-  4. client-level checkpoint recovery via the Checkpointer.
+  3. the failure-scenario engine (repro/fault, docs/DESIGN.md §6): every
+     failure process × rate as runtime lanes of ONE compiled sweep program
+     — i.i.d. losses, Markov bursty outages, Weibull lifetimes, and
+     stragglers that slow rounds without killing updates — with the
+     reliability coupling feeding failures back into client selection,
+  4. the Table-II robustness argument: with vs without fault tolerance at
+     a stress failure rate,
+  5. client-level checkpoint recovery via the Checkpointer.
 
 Run:  PYTHONPATH=src python examples/fault_tolerance.py
 """
@@ -20,11 +25,11 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs.base import FLConfig
-from repro.core.fault import (checkpoint_cost, fit_weibull,
-                              optimal_checkpoint_interval,
-                              weibull_failure_prob)
+from repro.fault import (PROCESSES, checkpoint_cost, fit_weibull,
+                         optimal_checkpoint_interval, process_code,
+                         weibull_failure_prob)
 from repro.data.synthetic import make_federated
-from repro.train.fl_driver import run_fl
+from repro.train import fl_driver
 
 
 def main():
@@ -47,21 +52,44 @@ def main():
     print(f"  p_f within t_c*={tc:.0f}s: "
           f"{float(weibull_failure_prob(tc, lam_hat, k_hat)):.3f}")
 
-    print("\n== 3. robustness under increasing failure rates (Table II logic) ==")
+    print("\n== 3. failure-scenario frontier: one compiled program ==")
     fed = make_federated(0, "unsw", n_samples=5_000, n_clients=20)
     base = FLConfig(n_clients=20, clients_per_round=6, local_epochs=5,
                     local_batch=32, local_lr=0.08, dp_enabled=True,
-                    dp_mode="clipped", dp_epsilon=50.0, dp_clip=5.0)
+                    dp_mode="clipped", dp_epsilon=50.0, dp_clip=5.0,
+                    fault_tolerance=True)
+    rates = (0.05, 0.35)
+    # every (process × rate) is a RUNTIME lane (fault_process sweeps like
+    # dp_sched) with the selection coupling on: the whole grid below
+    # compiles ONCE and runs as one vmapped program
+    cells = [{"fault_process": process_code(p), "failure_prob": r,
+              "fault_util_w": 1.0} for p in PROCESSES for r in rates]
+    sweep = fl_driver.run_fl_sweep(fed, base, cells, seeds=(0, 1),
+                                   rounds=30, eval_every=15)
+    print(f"  {'process':>10s} {'p_fail':>7s} {'acc%':>6s} {'fail_obs':>9s} "
+          f"{'time(sim)':>10s}")
+    for cell, row in zip(cells, sweep):
+        acc = np.mean([r.accuracy for r in row])
+        fail = np.mean([x for r in row for x in r.history["fail"]])
+        t = np.mean([r.sim_time_s for r in row])
+        print(f"  {PROCESSES[int(cell['fault_process'])]:>10s} "
+              f"{cell['failure_prob']:7.2f} {acc*100:6.1f} {fail:9.3f} "
+              f"{t:10.1f}")
+    print("  (stragglers: fail_obs = 0 but time grows — slow, not dead)")
+
+    print("\n== 4. robustness under failures, with vs without FT (Table II) ==")
     print(f"  {'p_fail':>7s} {'FT acc%':>8s} {'noFT acc%':>10s} "
           f"{'FT time':>8s} {'noFT time':>10s}")
-    for pf in (0.05, 0.25, 0.5):
-        fl = dataclasses.replace(base, failure_prob=pf)
-        r_ft = run_fl(fed, fl, "proposed", seed=0, rounds=30, eval_every=15)
-        r_no = run_fl(fed, fl, "proposed_noft", seed=0, rounds=30, eval_every=15)
+    for pf in (0.05, 0.35):
+        flc = dataclasses.replace(base, failure_prob=pf)
+        r_ft = fl_driver.run_fl(fed, flc, "proposed", seed=0, rounds=30,
+                                eval_every=15)
+        r_no = fl_driver.run_fl(fed, flc, "proposed_noft", seed=0, rounds=30,
+                                eval_every=15)
         print(f"  {pf:7.2f} {r_ft.accuracy*100:8.1f} {r_no.accuracy*100:10.1f} "
               f"{r_ft.sim_time_s:8.1f} {r_no.sim_time_s:10.1f}")
 
-    print("\n== 4. checkpoint write/restore (client recovery protocol) ==")
+    print("\n== 5. checkpoint write/restore (client recovery protocol) ==")
     from repro.models.mlp import init_mlp
 
     params = init_mlp(jax.random.key(0), fed.n_features, 64, 2)

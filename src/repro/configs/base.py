@@ -247,10 +247,21 @@ class FLConfig:
     dp_sched_rate: float = 0.3          # linear slope / adaptive spend step
     dp_stall_tol: float = 1e-3          # adaptive: AUC gain that counts as progress
     # --- fault tolerance ---
+    # The failure-scenario engine (repro/fault, docs/DESIGN.md §6):
+    # fault_tolerance is the STATIC checkpoint-recovery gate; everything
+    # else below is a RUNTIME lane, so a whole (process × rate) fault
+    # frontier compiles once — fault_process is a schedule-style code like
+    # dp_sched (repro.fault.process_code).
     fault_tolerance: bool = True
-    failure_prob: float = 0.05          # per-client per-round Bernoulli draw
-    weibull_scale: float = 600.0        # lambda (seconds)
-    weibull_shape: float = 1.2          # k
+    failure_prob: float = 0.05          # marginal per-client per-round rate
+    fault_process: float = 0.0          # 0 iid | 1 markov | 2 weibull | 3 straggler
+    fault_burst: float = 3.0            # markov: expected outage length (rounds)
+    straggler_slow: float = 4.0         # straggler: round-time stretch factor
+    fault_util_w: float = 0.0           # selection coupling: utility penalty on
+                                        # the per-client failure EMA (0 = off,
+                                        # keeping default lanes bitwise)
+    weibull_scale: float = 600.0        # lambda (seconds; cost model)
+    weibull_shape: float = 1.2          # k (cost model AND lifetime process)
     recovery_time: float = 30.0         # t_r (seconds)
     checkpoint_every: int = 0           # rounds; 0 -> derive from Weibull model
     # --- server ---
@@ -283,6 +294,11 @@ class FLParams(NamedTuple):
     dp_sched_rate: float = 0.3
     dp_stall_tol: float = 1e-3
     failure_prob: float = 0.05
+    fault_process: float = 0.0
+    fault_burst: float = 3.0
+    straggler_slow: float = 4.0
+    fault_util_w: float = 0.0
+    weibull_shape: float = 1.2
     recovery_time: float = 30.0
     avail_prob: float = 0.95
     explore_noise: float = 0.05

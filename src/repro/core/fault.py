@@ -18,9 +18,17 @@
   (``write_cost=None``) and use the corrected variant for actual cadence.
 * t_c* solves dC/dt_c = 0, found numerically (golden-section on a bracket).
 
-Also: failure *injection* for simulations (Bernoulli per round, or Weibull
-arrival times), and λ, k estimation from historical failure data (method of
-moments + MLE via Newton on the shape parameter).
+Also: λ, k estimation from historical failure data (method of moments + MLE
+via Newton on the shape parameter), and the legacy host-side
+:class:`FailureModel` sampler.
+
+This module is the HOST-SIDE half of the fault subsystem (cost analysis and
+fitting).  Per-round failure *injection* inside the compiled engine lives in
+``repro/fault/process.py`` — pluggable i.i.d. / Markov-bursty /
+Weibull-lifetime / straggler processes selected by the runtime
+``FLConfig.fault_process`` lane code, with per-client state threaded through
+the engine's scan carry (docs/DESIGN.md §6).  ``repro.fault`` re-exports
+both halves as one namespace.
 """
 from __future__ import annotations
 
@@ -127,11 +135,16 @@ def fit_weibull(samples: Sequence[float], iters: int = 100) -> Tuple[float, floa
 
 @dataclass
 class FailureModel:
-    """Per-round failure sampling for simulations.
+    """Per-round failure sampling for HOST-SIDE simulations.
 
     ``mode='bernoulli'`` draws RandomFailure(p_f) as in Algorithm 1;
     ``mode='weibull'`` samples a failure time within the round of duration
     ``round_time`` from Weibull(λ, k) and fails if it lands inside.
+
+    Superseded inside the engine by the failure-scenario processes of
+    ``repro/fault/process.py`` (which add correlated outages, lifetimes
+    with memory and stragglers as runtime sweep lanes); kept for ad-hoc
+    host-side analysis.
     """
 
     p_fail: float = 0.05

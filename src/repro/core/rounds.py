@@ -10,11 +10,21 @@ Two execution plans (DESIGN.md §4):
   ``data``); ``lax.scan`` over the K selected clients.  This is the only
   plan that fits ≥100B-parameter models.
 
-Fault-tolerance semantics inside a lowered step (see DESIGN.md): each failing
-client loses the work after its last checkpoint — with checkpointing every
-``c`` local steps a failure at step f keeps ``c·⌊f/c⌋`` steps; without
-checkpointing the failed client contributes nothing.  Time overheads are
-accounted by the cost model in ``core/fault.py`` at the driver level.
+Fault-tolerance semantics inside a lowered step (DESIGN.md §6): failure
+times come from the pluggable failure-scenario engine (``repro/fault``) —
+the runtime ``FLParams.fault_process`` code selects i.i.d. / Markov-bursty /
+Weibull-lifetime / straggler processes branch-free, and the per-client
+process state (:class:`~repro.fault.process.FaultState`) rides in
+:class:`RoundState` so the engine's scan threads it.  Each failing client
+loses the work after its last checkpoint — with checkpointing every ``c``
+local steps a failure at step f keeps ``c·⌊f/c⌋`` steps; without
+checkpointing the failed client contributes nothing.  Stragglers keep all
+their work but stretch the simulated round time via the emitted per-client
+``slow`` factors (``RoundMetrics.slow``).  Time overheads are accounted by
+the cost model in ``core/fault.py`` at the driver level.  The serial plan
+keeps the historical i.i.d. draw (same keys, via
+``repro.fault.iid_fail_times``) — non-i.i.d. processes are a
+``client_parallel`` feature; see DESIGN.md §6.
 
 Differential privacy: each selected client's update Δ_i is clipped and
 noised (``core/dp.py``) *before* aggregation — noise on updates, never on
@@ -42,6 +52,7 @@ from repro.configs.base import FLConfig, FLParams, fl_params
 from repro.core import aggregation as agg
 from repro.core import dp as dp_lib
 from repro.core import selection as sel_lib
+from repro.fault import process as fault_proc
 from repro.optim.optimizers import make_server_optimizer, sgd
 
 
@@ -54,6 +65,7 @@ class RoundState(NamedTuple):
     kctl: sel_lib.KControllerState
     round_idx: jnp.ndarray
     rng: jnp.ndarray
+    fault: fault_proc.FaultState
 
 
 class RoundMetrics(NamedTuple):
@@ -65,6 +77,7 @@ class RoundMetrics(NamedTuple):
     global_loss: jnp.ndarray
     k_effective: jnp.ndarray
     update_norms: jnp.ndarray
+    slow: jnp.ndarray      # [n] round-time stretch factors (straggler process)
 
 
 def init_round_state(params, fl: FLConfig, key, n_clients=None, **util_kw) -> RoundState:
@@ -77,6 +90,7 @@ def init_round_state(params, fl: FLConfig, key, n_clients=None, **util_kw) -> Ro
         kctl=sel_lib.init_k_state(fl),
         round_idx=jnp.zeros((), jnp.int32),
         rng=key,
+        fault=fault_proc.init_fault_state(n),
     )
 
 
@@ -228,21 +242,20 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
                                      (n_clients,)).astype(jnp.float32)
 
         # ---- ComputeUtility + SelectTopK (line 4) ----
-        utility = sel_lib.compute_utility(state.util, fl)
+        utility = sel_lib.compute_utility(state.util, fl,
+                                          fault_w=pr.fault_util_w)
         k_eff = (state.kctl.k if fl.adaptive_k
                  else jnp.asarray(float(fl.clients_per_round), jnp.float32))
         sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, k_max,
                             pr.explore_noise)
 
         # ---- failure injection + checkpoint-recovery truncation ----
-        # failure happens with prob p_f, uniformly within local steps
+        # process-emitted failure times (repro/fault): the runtime
+        # fault_process code picks iid/markov/weibull/straggler lanes
+        # branch-free; the iid lane reproduces the historical draw bitwise
         local_steps = jax.tree.leaves(batches)[0].shape[1]
-        fails = jax.random.bernoulli(jax.random.fold_in(k_fail, 1),
-                                     pr.failure_prob, (n_clients,))
-        fail_at = jnp.where(
-            fails, jax.random.randint(jax.random.fold_in(k_fail, 2),
-                                      (n_clients,), 0, local_steps), local_steps
-        )
+        fail_at, slow, new_fault = fault_proc.fault_step(
+            state.fault, k_fail, pr, n_clients, local_steps)
         eff_steps, failed = _effective_steps(
             fail_at, local_steps, ckpt_every_steps, fl.fault_tolerance
         )
@@ -303,15 +316,18 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         # ---- bookkeeping ----
         sel_denom = jnp.maximum(jnp.sum(contrib_mask), 1.0)
         global_loss = jnp.sum(post_loss * contrib_mask) / sel_denom
+        failed_f = failed.astype(jnp.float32)
         util = sel_lib.update_utility_state(state.util, contrib_mask, pre_loss,
-                                            post_loss, fl, coherence=coherence)
+                                            post_loss, fl, coherence=coherence,
+                                            attempted=sel_mask, failed=failed_f)
         kctl = sel_lib.update_k(state.kctl, global_loss, fl,
                                 tol=pr.k_tol, patience=pr.k_patience)
 
         new_state = RoundState(new_params, new_server_state, util, kctl,
-                               state.round_idx + 1, rng)
-        metrics = RoundMetrics(sel_mask, avail, failed.astype(jnp.float32),
-                               pre_loss, post_loss, global_loss, k_eff, norms)
+                               state.round_idx + 1, rng, new_fault)
+        metrics = RoundMetrics(sel_mask, avail, failed_f,
+                               pre_loss, post_loss, global_loss, k_eff, norms,
+                               slow)
         return new_state, metrics
 
     return round_step
@@ -353,7 +369,8 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
         avail = jax.random.bernoulli(k_avail, pr.avail_prob,
                                      (n_clients,)).astype(jnp.float32)
-        utility = sel_lib.compute_utility(state.util, fl)
+        utility = sel_lib.compute_utility(state.util, fl,
+                                          fault_w=pr.fault_util_w)
         k_eff = jnp.minimum(
             state.kctl.k if fl.adaptive_k else float(fl.clients_per_round), float(K)
         )
@@ -363,13 +380,14 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         _, sel_idx = jax.lax.top_k(sel_mask + utility * 1e-6, K)
         slot_live = (jnp.arange(K) < k_eff).astype(jnp.float32)
 
+        # the serial plan keeps the historical i.i.d. draw (per SLOT, so a
+        # per-client process state cannot follow the slot→client remapping
+        # across rounds); non-iid fault processes are a client_parallel
+        # feature — DESIGN.md §6
         local_steps = jax.tree.leaves(batches)[0].shape[1]
-        fails = jax.random.bernoulli(k_fail, pr.failure_prob, (K,))
-        fail_at = jnp.where(
-            fails,
-            jax.random.randint(jax.random.fold_in(k_fail, 1), (K,), 0, local_steps),
-            local_steps,
-        )
+        fail_at = fault_proc.iid_fail_times(
+            k_fail, jax.random.fold_in(k_fail, 1), pr.failure_prob, K,
+            local_steps)
         eff_steps, failed = _effective_steps(fail_at, local_steps,
                                              ckpt_every_steps,
                                              fl.fault_tolerance)
@@ -423,9 +441,10 @@ def make_serial_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
                                 tol=pr.k_tol, patience=pr.k_patience)
 
         new_state = RoundState(new_params, new_server_state, util, kctl,
-                               state.round_idx + 1, rng)
+                               state.round_idx + 1, rng, state.fault)
         metrics = RoundMetrics(full_mask, avail, failed.astype(jnp.float32),
-                               full_pre, full_post, global_loss, k_eff, norms)
+                               full_pre, full_post, global_loss, k_eff, norms,
+                               jnp.ones((n_clients,), jnp.float32))
         return new_state, metrics
 
     return round_step

@@ -44,6 +44,10 @@ class UtilityState(NamedTuple):
     comm_cost: jnp.ndarray         # relative communication cost
     last_selected: jnp.ndarray     # rounds since last participation
     participation: jnp.ndarray     # cumulative selection count
+    fail_ema: jnp.ndarray          # EMA of observed failures among rounds the
+                                   # client was selected — the reliability
+                                   # signal the fault engine feeds back into
+                                   # selection (docs/DESIGN.md §6)
 
 
 def init_utility_state(n: int, key=None, data_size=None, data_quality=None,
@@ -66,15 +70,25 @@ def init_utility_state(n: int, key=None, data_size=None, data_quality=None,
         comm_cost=(comm_cost if comm_cost is not None else ones * 0.5),
         last_selected=jnp.zeros((n,), jnp.float32),
         participation=jnp.zeros((n,), jnp.float32),
+        fail_ema=jnp.zeros((n,), jnp.float32),
     )
 
 
-def compute_utility(state: UtilityState, fl: FLConfig) -> jnp.ndarray:
+def compute_utility(state: UtilityState, fl: FLConfig,
+                    fault_w=None) -> jnp.ndarray:
     """U_i — the paper's multi-factor utility score.
 
     F(S_t) = α·Accuracy(S_t) − γ·Cost(S_t): the per-client marginal of the
     accuracy term is the perf/data factors; the cost term subtracts
     communication+computation cost (Cost_i = Comm_i + Comp_i).
+
+    ``fault_w`` is the RUNTIME reliability-coupling weight
+    (``FLParams.fault_util_w``): unreliable clients' utility decays by
+    ``fault_w · fail_ema`` so the top-k mask — and, through the resulting
+    global loss, the adaptive-K controller — react to failure-prone
+    cohorts (the paper's selection×fault interplay).  The default weight
+    is 0.0, which is an exact no-op: default lanes stay bitwise identical
+    to the pre-fault-engine selection stream.
     """
     ds = state.data_size / jnp.maximum(jnp.mean(state.data_size), 1e-9)
     # NOTE (validated in EXPERIMENTS.md §Paper-claims): raw local-loss
@@ -87,7 +101,12 @@ def compute_utility(state: UtilityState, fl: FLConfig) -> jnp.ndarray:
     capacity = state.compute
     staleness = jnp.log1p(state.last_selected) * 0.1  # exploration bonus
     cost = state.comm_cost + (1.0 / jnp.maximum(capacity, 0.1)) * 0.5
-    return fl.alpha * (perf + quality + 0.2 * capacity) - fl.gamma * cost + staleness
+    base = fl.alpha * (perf + quality + 0.2 * capacity) - fl.gamma * cost + staleness
+    if fault_w is None:
+        return base
+    # fail_ema >= 0 and finite, so fault_w == 0.0 subtracts an exact +0.0:
+    # the coupling is bitwise-free until a lane turns it on.
+    return base - fault_w * state.fail_ema
 
 
 # ---------------------------------------------------------------------------
@@ -220,12 +239,20 @@ def update_k(state: KControllerState, global_loss, fl: FLConfig,
 
 
 def update_utility_state(state: UtilityState, sel_mask, pre_loss, post_loss,
-                         fl: FLConfig, coherence=None) -> UtilityState:
+                         fl: FLConfig, coherence=None, attempted=None,
+                         failed=None) -> UtilityState:
     """EMA updates from this round's local training results.
 
     pre/post_loss: [n] local loss before/after local training; only selected
     clients' stats move.  ``coherence``: [n] cos(delta_i, agg_delta) for the
     selected clients (0 elsewhere) — the update-quality signal.
+
+    ``attempted``/``failed``: the fault engine's reliability observables —
+    ``attempted`` is the ORIGINAL selection mask (a failed client was still
+    selected; ``sel_mask`` here is the contribution mask, which excludes
+    it) and ``failed`` the per-client failure indicator.  Every attempted
+    client's ``fail_ema`` moves toward its failure outcome; omitting them
+    (legacy callers, the serial plan) leaves ``fail_ema`` untouched.
     """
     m = sel_mask > 0
     improvement = jnp.maximum(pre_loss - post_loss, -1.0)
@@ -237,6 +264,11 @@ def update_utility_state(state: UtilityState, sel_mask, pre_loss, post_loss,
     coh = state.coherence
     if coherence is not None:
         coh = jnp.where(m, (1 - e) * coh + e * coherence, coh)
+    fail_ema = state.fail_ema
+    if failed is not None:
+        att = (attempted if attempted is not None else sel_mask) > 0
+        fail_ema = jnp.where(
+            att, (1 - e) * fail_ema + e * failed.astype(jnp.float32), fail_ema)
     return state._replace(
         perf_ema=perf,
         loss_ema=loss_ema,
@@ -244,4 +276,5 @@ def update_utility_state(state: UtilityState, sel_mask, pre_loss, post_loss,
         coherence=coh,
         last_selected=jnp.where(m, 0.0, state.last_selected + 1.0),
         participation=state.participation + sel_mask,
+        fail_ema=fail_ema,
     )

@@ -1,0 +1,24 @@
+"""Fault-tolerance subsystem (paper §IV): one namespace for both halves.
+
+* the **checkpoint cost model** and Weibull fitting — host-side analysis,
+  lives in ``repro.core.fault`` (the paper's C(t_c), the corrected renewal
+  variant, Young/Daly, MLE fitting);
+* the **failure-scenario engine** — compiled per-round failure *processes*
+  (i.i.d. / Markov-bursty / Weibull-lifetime / straggler) selected by the
+  runtime lane code ``FLConfig.fault_process``, with per-client state
+  threaded through the engine's scan carry (``repro.fault.process``,
+  docs/DESIGN.md §6).
+"""
+from repro.core.fault import (checkpoint_cost, fit_weibull,
+                              optimal_checkpoint_interval, recovery_overhead,
+                              weibull_failure_prob)
+from repro.fault.process import (PROCESSES, FaultState, fault_step,
+                                 iid_fail_times, init_fault_state,
+                                 process_code)
+
+__all__ = [
+    "PROCESSES", "FaultState", "checkpoint_cost", "fault_step",
+    "fit_weibull", "iid_fail_times", "init_fault_state",
+    "optimal_checkpoint_interval", "process_code", "recovery_overhead",
+    "weibull_failure_prob",
+]

@@ -1,0 +1,160 @@
+"""Pluggable failure processes — the failure-scenario engine (paper §IV).
+
+The seed repo modelled client failures as ONE process: an i.i.d. Bernoulli
+draw per (client, round).  Surveys of client selection under unreliable
+participation (PAPERS.md: Gouissem et al. 2023, Németh et al. 2022) treat
+the failure process itself as a scenario axis — outages are bursty and
+correlated, hardware lifetimes are Weibull, and stragglers hurt without
+ever dying.  This module grows that axis into an engine component:
+
+* ``iid``       (code 0) — per-round Bernoulli(``failure_prob``), bitwise
+  the pre-engine behaviour (same keys, same draws — pinned in
+  ``tests/test_fault.py``).
+* ``markov``    (code 1) — per-client two-state (up/down) Markov chain:
+  an outage persists with ``1 − 1/fault_burst`` per round (expected
+  outage length ``fault_burst`` rounds) and starts at the rate that makes
+  the STATIONARY failure probability equal ``failure_prob``, so the
+  marginal matches the i.i.d. process while failures arrive in bursts.
+  The entry probability ``p/(L(1−p))`` only exists for
+  ``L ≥ p/(1−p)``, so the effective burst length is floored there —
+  the configured marginal always holds exactly, even at high rates.
+  A client newly entering an outage dies at a uniform local step; a
+  client still down at round start contributes nothing (fails at step 0).
+* ``weibull``   (code 2) — per-client Weibull lifetimes: each client
+  carries an age (rounds since its last failure) and fails with the
+  discrete Weibull hazard ``h(a) = 1 − exp((a/λ)^k − ((a+1)/λ)^k)``
+  (shape ``k = weibull_shape``; ageing hardware for k > 1).  λ is
+  calibrated so the steady-state marginal failure rate is
+  ``failure_prob``: the expected cycle length is
+  ``Σ_a exp(−(a/λ)^k) ≈ λ·Γ(1+1/k) + ½`` (Euler–Maclaurin), hence
+  ``λ = (1/p − ½) / Γ(1+1/k)``.
+* ``straggler`` (code 3) — slow clients instead of dead ones: with
+  probability ``failure_prob`` a client's round time is stretched by
+  ``straggler_slow``×.  The update SURVIVES (``fail_at = local_steps``);
+  only the simulated round time moves (``fl_driver.simulate_round_time``
+  takes the emitted per-client ``slow`` factors).
+
+The process is selected by the RUNTIME lane code ``FLParams.fault_process``
+(like the privacy subsystem's ``dp_sched``): every process is computed
+branch-free each round and a ``jnp.where`` chain picks the lane's one, so
+a whole (process × rate × seed) frontier compiles ONCE in the sweep engine
+(``benchmarks/bench_fault.py`` asserts it).  Per-client process state — the
+Markov outage indicator and the Weibull age — is a :class:`FaultState`
+carried in ``core/rounds.RoundState`` through the ``lax.scan``; it evolves
+by the same rule on every lane (each process only ever reads its own
+field), which is what keeps the selection branch-free.
+
+Key discipline (the bitwise pin): the i.i.d. path consumes
+``fold_in(k_fail, 1)`` / ``fold_in(k_fail, 2)`` exactly as the pre-engine
+round step did; the other processes draw from ``fold_in(k_fail, 3..7)``,
+which never perturbs the i.i.d. stream.  Semantics of the emitted failure
+times are documented in docs/DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Runtime process codes (FLParams.fault_process carries these as f32 lanes).
+PROCESSES = ("iid", "markov", "weibull", "straggler")
+
+
+def process_code(name: str) -> float:
+    """Runtime lane value for a failure-process name."""
+    return float(PROCESSES.index(name))
+
+
+class FaultState(NamedTuple):
+    """Per-client failure-process state, carried across rounds (all [n] f32).
+
+    Rides in ``core/rounds.RoundState`` so the compiled engine's
+    ``lax.scan`` threads it for free; lanes that never read a field still
+    evolve it (branch-free), which costs a handful of scalar ops per
+    client and keeps the process code a pure runtime value.
+    """
+
+    down: jnp.ndarray   # Markov outage indicator (1 = client currently down)
+    age: jnp.ndarray    # Weibull age: rounds survived since last failure
+
+
+def init_fault_state(n: int) -> FaultState:
+    return FaultState(down=jnp.zeros((n,), jnp.float32),
+                      age=jnp.zeros((n,), jnp.float32))
+
+
+def iid_fail_times(k_bern, k_step, p, n: int, local_steps: int) -> jnp.ndarray:
+    """The pre-engine draw, verbatim: Bernoulli(p) failures at a uniform
+    local step; ``local_steps`` for survivors.  Both execution plans route
+    their i.i.d. path through this helper with their historical keys, so
+    the refactor cannot move a single bit of the default lanes."""
+    fails = jax.random.bernoulli(k_bern, p, (n,))
+    step = jax.random.randint(k_step, (n,), 0, local_steps)
+    return jnp.where(fails, step, local_steps)
+
+
+def fault_step(state: FaultState, k_fail, pr, n: int,
+               local_steps: int) -> Tuple[jnp.ndarray, jnp.ndarray, FaultState]:
+    """One round of the failure-scenario engine.
+
+    Returns ``(fail_at [n] i32, slow [n] f32, new_state)``: the local step
+    at which each client dies (``local_steps`` = survives), the round-time
+    stretch factor (1.0 except for stragglers), and the evolved process
+    state.  ``pr`` is the runtime :class:`~repro.configs.base.FLParams` —
+    ``fault_process`` selects the process branch-free, so rate/process
+    sweeps share one compiled program.  ``k_fail`` is the round step's
+    failure key; see the module docstring for the fold_in discipline.
+    """
+    p = pr.failure_prob
+
+    # --- iid (code 0): bitwise the pre-engine draw --------------------------
+    fa_iid = iid_fail_times(jax.random.fold_in(k_fail, 1),
+                            jax.random.fold_in(k_fail, 2), p, n, local_steps)
+
+    p_c = jnp.clip(p, 1e-6, 0.999)
+
+    # --- markov (code 1): bursty, correlated outages ------------------------
+    # entry prob e = p/(L(1-p)) needs e <= 1, i.e. L >= p/(1-p): shorter
+    # bursts cannot realise a stationary rate p, so the effective burst is
+    # floored there and the marginal stays exactly failure_prob instead of
+    # silently drifting at high rates
+    burst = jnp.maximum(jnp.maximum(pr.fault_burst, 1.0),
+                        p_c / (1.0 - p_c))
+    stay = 1.0 - 1.0 / burst                       # P(down -> down)
+    enter = jnp.clip(p_c / (burst * (1.0 - p_c)), 0.0, 1.0)  # P(up -> down)
+    u_m = jax.random.uniform(jax.random.fold_in(k_fail, 3), (n,))
+    was_down = state.down > 0
+    down_next = jnp.where(was_down, u_m < stay, u_m < enter)
+    step_m = jax.random.randint(jax.random.fold_in(k_fail, 4), (n,),
+                                0, local_steps)
+    fa_markov = jnp.where(down_next & ~was_down, step_m,
+                          jnp.where(down_next, 0, local_steps))
+
+    # --- weibull (code 2): per-client lifetimes, ageing hazard --------------
+    k_w = jnp.maximum(pr.weibull_shape, 0.1)
+    gamma_1p = jnp.exp(jax.scipy.special.gammaln(1.0 + 1.0 / k_w))
+    lam = jnp.maximum((1.0 / p_c - 0.5) / gamma_1p, 1e-3)
+    a = state.age
+    hazard = -jnp.expm1((a / lam) ** k_w - ((a + 1.0) / lam) ** k_w)
+    u_w = jax.random.uniform(jax.random.fold_in(k_fail, 5), (n,))
+    fail_w = u_w < hazard
+    step_w = jax.random.randint(jax.random.fold_in(k_fail, 6), (n,),
+                                0, local_steps)
+    fa_weibull = jnp.where(fail_w, step_w, local_steps)
+
+    # --- straggler (code 3): slow, not dead ---------------------------------
+    u_s = jax.random.uniform(jax.random.fold_in(k_fail, 7), (n,))
+    straggler = u_s < p
+    slow_s = jnp.where(straggler, jnp.maximum(pr.straggler_slow, 1.0), 1.0)
+
+    code = pr.fault_process
+    fail_at = jnp.where(
+        code < 0.5, fa_iid,
+        jnp.where(code < 1.5, fa_markov,
+                  jnp.where(code < 2.5, fa_weibull,
+                            jnp.full((n,), local_steps, fa_iid.dtype))))
+    slow = jnp.where(code > 2.5, slow_s, jnp.ones((n,), jnp.float32))
+    new_state = FaultState(down=down_next.astype(jnp.float32),
+                           age=jnp.where(fail_w, 0.0, a + 1.0))
+    return fail_at, slow, new_state

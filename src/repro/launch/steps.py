@@ -264,6 +264,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
         kctl=jax.tree.map(lambda _: _ns(mesh, P()), state_spec.kctl),
         round_idx=_ns(mesh, P()),
         rng=_ns(mesh, P()),
+        fault=jax.tree.map(lambda _: _ns(mesh, P()), state_spec.fault),
     )
     if plan == "client_parallel":
         lead_spec = (client_axes, None)

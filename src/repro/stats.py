@@ -1,0 +1,25 @@
+"""Shared nonparametric statistics (benchmarks AND examples import this).
+
+The Mann-Whitney U comparison the paper uses for Table III used to be
+duplicated verbatim in ``benchmarks/bench_table3.py`` and
+``examples/anomaly_fl.py``; it lives here once now, and the fault-frontier
+robustness gate (``benchmarks/bench_fault.py``) reuses it.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+
+def mannwhitney_greater(a: Sequence[float], b: Sequence[float],
+                        alpha: float = 0.05) -> Tuple[float, float, bool]:
+    """One-sided Mann-Whitney U test that ``a``'s distribution is
+    stochastically greater than ``b``'s.
+
+    Returns ``(U, p, significant)`` with significance at ``alpha``.
+    scipy is imported lazily so ``repro`` stays importable on minimal
+    installs that only run the engine.
+    """
+    from scipy import stats
+
+    u, p = stats.mannwhitneyu(list(a), list(b), alternative="greater")
+    return float(u), float(p), bool(p < alpha)

@@ -37,6 +37,12 @@ Execution engines (docs/ARCHITECTURE.md):
   per-round σ from the scheduler, exhaustion masking via the round step's
   ``update_gate``, accounted ε in the eval trace (``repro/privacy``,
   docs/ARCHITECTURE.md §Privacy).
+* Failure scenarios (``repro/fault``, docs/DESIGN.md §6): the runtime
+  ``fault_process`` lane code selects iid / Markov-bursty /
+  Weibull-lifetime / straggler failure processes; per-client process
+  state rides in ``RoundState`` through the scan carry, stragglers feed
+  per-client ``slow`` factors into :func:`simulate_round_time`, and the
+  eval trace carries a ``fail`` history column.
 * :func:`run_fl_legacy` — the original per-round Python loop, kept as the
   semantic oracle: tests/test_engine.py checks the scanned engine against
   it, and benchmarks/bench_engine.py records the old-vs-new rounds/sec
@@ -156,7 +162,8 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
                         comm_time: float = 0.35,
                         ckpt_write: float = 0.08,
                         param_kb: float = 64.0,
-                        params: Optional[FLParams] = None) -> jnp.ndarray:
+                        params: Optional[FLParams] = None,
+                        slow=None) -> jnp.ndarray:
     """Paper-faithful wall-time model for one round (see module docstring).
 
     Pure ``jnp`` — jit-safe, so the cumulative simulated time is carried
@@ -164,12 +171,20 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
     Branching on the STATIC FLConfig fields (dp_enabled, fault_tolerance)
     is fine; the recovery term reads the runtime ``params`` (defaulting to
     the config's values), so failure-model sweeps share one program.
+
+    ``slow``: optional [n] per-client round-time stretch factors from the
+    failure-scenario engine (``RoundMetrics.slow`` — the straggler process;
+    all-ones on every other lane, where ``x·1.0`` is bitwise ``x``).  The
+    round waits for the slowest selected client, so one straggler stretches
+    the whole cohort's round — exactly the synchronous-FL pathology.
     """
     pr = fl_params(fl) if params is None else params
     sel = sel_mask > 0
     any_sel = jnp.any(sel)
     steps = fl.local_epochs
     compute = steps * base_step_time / jnp.maximum(util_state.compute, 0.1)
+    if slow is not None:
+        compute = compute * slow
     slowest = jnp.max(jnp.where(sel, compute, 0.0))
     t = slowest + comm_time * (1.0 + param_kb / 1024.0)
     if fl.dp_enabled:
@@ -308,21 +323,24 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
                 state, m = round_step(state, batches, pr)
             cum_time = cum_time + simulate_round_time(fl, state.util,
                                                       m.sel_mask, m.failed,
-                                                      params=pr)
+                                                      params=pr, slow=m.slow)
+            fail_mean = jnp.mean(m.failed)
             if scheduled:
                 return ((state, data_key, cum_time, acct, sched),
-                        (m.global_loss, m.k_effective, sigma_t, live))
-            return (state, data_key, cum_time), (m.global_loss, m.k_effective)
+                        (m.global_loss, m.k_effective, fail_mean, sigma_t,
+                         live))
+            return ((state, data_key, cum_time),
+                    (m.global_loss, m.k_effective, fail_mean))
 
         def eval_block(carry, block_len):
             carry, ys = jax.lax.scan(one_round, carry, None,
                                      length=block_len)
             if scheduled:
                 state, data_key, cum_time, acct, sched = carry
-                losses, ks, sigmas, lives = ys
+                losses, ks, fails, sigmas, lives = ys
             else:
                 state, _, cum_time = carry
-                losses, ks = ys
+                losses, ks, fails = ys
             acc = spec.accuracy(state.params, tx, ty)
             proba = spec.predict_proba(state.params, tx)[:, 1]
             auc = auc_roc_jnp(proba, ty)
@@ -331,6 +349,7 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
                 "acc": acc,
                 "auc": auc,
                 "k": ks[-1],
+                "fail": fails[-1],
                 "cum_time": cum_time,
             }
             if scheduled:
@@ -662,7 +681,7 @@ def run_fl_legacy(
 
     tx, ty = jnp.asarray(fed.test_x), jnp.asarray(fed.test_y)
     history = {"round": [], "loss": [], "acc": [], "auc": [], "k": [],
-               "cum_time": []}
+               "fail": [], "cum_time": []}
     sim_time = 0.0
     t0 = time.time()
     for r in range(rounds):
@@ -671,7 +690,8 @@ def run_fl_legacy(
         )
         state, metrics = round_step(state, batches)
         sim_time += float(simulate_round_time(fl, state.util, metrics.sel_mask,
-                                              metrics.failed))
+                                              metrics.failed,
+                                              slow=metrics.slow))
         if (r + 1) % eval_every == 0 or r == rounds - 1:
             acc = float(spec.accuracy(state.params, tx, ty))
             proba = np.asarray(spec.predict_proba(state.params, tx)[:, 1])
@@ -681,6 +701,7 @@ def run_fl_legacy(
             history["acc"].append(acc)
             history["auc"].append(auc)
             history["k"].append(float(metrics.k_effective))
+            history["fail"].append(float(jnp.mean(metrics.failed)))
             history["cum_time"].append(sim_time)
 
     acc, auc = history["acc"][-1], history["auc"][-1]

@@ -1,0 +1,260 @@
+"""Failure-scenario engine tests (ISSUE 5).
+
+* the ``iid`` process is the pre-engine draw, key for key — the
+  load-bearing bitwise pin (the round step consumes only the emitted
+  ``fail_at``, so identical draws mean identical trajectories), plus
+  engine-level default-lane equality in the style of
+  ``tests/test_models.py``;
+* empirical marginal failure rate of every process matches its
+  ``failure_prob`` parameter;
+* the Markov process shows the configured burst autocorrelation
+  (``P(fail_{t+1} | fail_t) ≈ 1 − 1/fault_burst``), which i.i.d. lacks;
+* stragglers stretch the simulated round time without killing updates;
+* a (process × rate) frontier is runtime lanes: ONE ``_get_runner`` miss;
+* the reliability EMA decays failed clients' utility only when the
+  runtime coupling weight is on.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, fl_params, fl_static
+from repro.core import selection as sel_lib
+from repro.data.synthetic import make_federated
+from repro.fault import (PROCESSES, FaultState, fault_step, iid_fail_times,
+                         init_fault_state, process_code)
+from repro.train import fl_driver
+
+LOCAL_STEPS = 6
+
+
+@pytest.fixture(scope="module")
+def fed():
+    return make_federated(0, "unsw", n_samples=900, n_clients=8)
+
+
+@pytest.fixture(scope="module")
+def fl():
+    return FLConfig(n_clients=8, clients_per_round=3, rounds=8,
+                    local_epochs=2, local_batch=16, local_lr=0.08,
+                    dp_enabled=True, dp_mode="clipped", dp_epsilon=200.0,
+                    dp_clip=5.0, fault_tolerance=True, failure_prob=0.05)
+
+
+def _pr(**kw):
+    return fl_params(FLConfig(**kw))
+
+
+def _chain(pr, n, rounds, seed=0):
+    """Drive fault_step for ``rounds`` rounds; returns the [rounds, n]
+    failure indicator matrix and the final state."""
+    st = init_fault_state(n)
+    key = jax.random.key(seed)
+    step = jax.jit(lambda s, k: fault_step(s, k, pr, n, LOCAL_STEPS))
+    rows = []
+    for r in range(rounds):
+        fail_at, slow, st = step(st, jax.random.fold_in(key, r))
+        rows.append(np.asarray(fail_at) < LOCAL_STEPS)
+    return np.stack(rows), st
+
+
+# ---------------------------------------------------------------------------
+# bitwise pin: iid process == pre-engine draw
+# ---------------------------------------------------------------------------
+
+
+def test_process_registry():
+    assert PROCESSES == ("iid", "markov", "weibull", "straggler")
+    assert process_code("iid") == 0.0 and process_code("straggler") == 3.0
+    with pytest.raises(ValueError):
+        process_code("no_such_process")
+
+
+def test_iid_process_is_prerefactor_draw_bitwise():
+    """The engine's default lane consumed, pre-refactor:
+    ``bernoulli(fold_in(k_fail, 1), p)`` then ``randint(fold_in(k_fail, 2))``.
+    The iid process must reproduce those arrays exactly — the round step
+    consumes only ``fail_at``, so equal draws are equal trajectories."""
+    n, p = 16, 0.3
+    pr = _pr(failure_prob=p)
+    k_fail = jax.random.fold_in(jax.random.key(42), 7)
+    fail_at, slow, _ = fault_step(init_fault_state(n), k_fail, pr, n,
+                                  LOCAL_STEPS)
+    fails_old = jax.random.bernoulli(jax.random.fold_in(k_fail, 1), p, (n,))
+    step_old = jax.random.randint(jax.random.fold_in(k_fail, 2), (n,), 0,
+                                  LOCAL_STEPS)
+    expected = jnp.where(fails_old, step_old, LOCAL_STEPS)
+    np.testing.assert_array_equal(np.asarray(fail_at), np.asarray(expected))
+    np.testing.assert_array_equal(np.asarray(slow), np.ones(n, np.float32))
+    # the serial plan's historical keying rides the shared helper
+    serial = iid_fail_times(k_fail, jax.random.fold_in(k_fail, 1), p, n,
+                            LOCAL_STEPS)
+    fails_s = jax.random.bernoulli(k_fail, p, (n,))
+    step_s = jax.random.randint(jax.random.fold_in(k_fail, 1), (n,), 0,
+                                LOCAL_STEPS)
+    np.testing.assert_array_equal(
+        np.asarray(serial), np.asarray(jnp.where(fails_s, step_s, LOCAL_STEPS)))
+
+
+@pytest.mark.parametrize("ft", [True, False])
+def test_default_engine_lane_is_explicit_iid_lane(fed, fl, ft):
+    """A config that never mentions the fault-engine fields and one that
+    sets them to their explicit iid defaults are the same lane — with and
+    without fault tolerance (the ``fault_tolerance=False`` pre-refactor
+    pin)."""
+    base = dataclasses.replace(fl, fault_tolerance=ft)
+    explicit = dataclasses.replace(base, fault_process=process_code("iid"),
+                                   fault_util_w=0.0)
+    assert fl_static(explicit) == fl_static(base)
+    a = fl_driver.run_fl(fed, base, "proposed", seed=2, rounds=6, eval_every=3)
+    b = fl_driver.run_fl(fed, explicit, "proposed", seed=2, rounds=6,
+                         eval_every=3)
+    assert a.history == b.history
+
+
+# ---------------------------------------------------------------------------
+# marginal rates + burstiness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("proc,rate", [
+    ("iid", 0.1), ("iid", 0.3),
+    ("markov", 0.1), ("markov", 0.3),
+    ("weibull", 0.1), ("weibull", 0.3),
+])
+def test_marginal_failure_rate_matches_parameter(proc, rate):
+    n, rounds = 256, 160
+    pr = _pr(failure_prob=rate, fault_process=process_code(proc))
+    fails, _ = _chain(pr, n, rounds, seed=hash(proc) % 1000)
+    # skip a short burn-in: markov starts all-up, weibull all age-0
+    emp = fails[20:].mean()
+    se = np.sqrt(rate * (1 - rate) / (n * (rounds - 20)))
+    # correlated processes have fewer effective samples; 5x the iid SE
+    # plus a 10% relative calibration allowance is comfortably tight
+    tol = 5 * se + 0.1 * rate
+    assert abs(emp - rate) < tol, (proc, rate, emp, tol)
+
+
+def test_straggler_never_fails_and_stretches_time(fl):
+    n, rate = 64, 0.4
+    pr = _pr(failure_prob=rate, fault_process=process_code("straggler"),
+             straggler_slow=4.0)
+    k = jax.random.fold_in(jax.random.key(3), 0)
+    fail_at, slow, _ = fault_step(init_fault_state(n), k, pr, n, LOCAL_STEPS)
+    assert (np.asarray(fail_at) == LOCAL_STEPS).all(), "stragglers must survive"
+    s = np.asarray(slow)
+    assert set(np.unique(s)) <= {1.0, 4.0}
+    frac = (s > 1.0).mean()
+    assert 0.15 < frac < 0.7  # ~rate of the clients are stretched
+    # the time model waits for the slowest selected client
+    util = sel_lib.init_utility_state(n, key=jax.random.key(0))
+    mask = jnp.ones((n,), jnp.float32)
+    failed = jnp.zeros((n,), jnp.float32)
+    t_plain = float(fl_driver.simulate_round_time(fl, util, mask, failed))
+    t_slow = float(fl_driver.simulate_round_time(fl, util, mask, failed,
+                                                 slow=jnp.asarray(s)))
+    assert t_slow > t_plain
+    # all-ones slow factors are an exact no-op
+    t_ones = float(fl_driver.simulate_round_time(fl, util, mask, failed,
+                                                 slow=jnp.ones((n,))))
+    assert t_ones == t_plain
+
+
+def test_markov_burst_autocorrelation():
+    """P(fail_{t+1} | fail_t) must be ≈ 1 − 1/burst for the Markov process
+    (configured persistence), while iid shows ≈ the marginal rate."""
+    n, rounds, rate, burst = 256, 200, 0.15, 5.0
+    for proc, expect in (("markov", 1.0 - 1.0 / burst), ("iid", rate)):
+        pr = _pr(failure_prob=rate, fault_process=process_code(proc),
+                 fault_burst=burst)
+        fails, _ = _chain(pr, n, rounds, seed=11)
+        prev, nxt = fails[20:-1], fails[21:]
+        p_cond = nxt[prev].mean()
+        assert abs(p_cond - expect) < 0.08, (proc, p_cond, expect)
+
+
+def test_markov_marginal_holds_at_high_rate_low_burst():
+    """enter = p/(L(1−p)) > 1 is unrealisable; the burst floor L ≥ p/(1−p)
+    must keep the stationary marginal at failure_prob instead of silently
+    clipping to a lower rate (review fix: p=0.6, burst=1 used to realise
+    0.5, a 17% miscalibration)."""
+    n, rounds, rate = 256, 200, 0.6
+    pr = _pr(failure_prob=rate, fault_process=process_code("markov"),
+             fault_burst=1.0)
+    fails, _ = _chain(pr, n, rounds, seed=13)
+    emp = fails[20:].mean()
+    assert abs(emp - rate) < 0.05, emp
+
+
+def test_weibull_age_resets_on_failure():
+    n, rounds = 64, 40
+    pr = _pr(failure_prob=0.3, fault_process=process_code("weibull"))
+    fails, st = _chain(pr, n, rounds, seed=5)
+    age = np.asarray(st.age)
+    assert fails.any() and (age >= 0).all()
+    # a client that failed on the last round has its age reset to 0
+    last = fails[-1]
+    assert (age[last] == 0.0).all()
+    assert (age[~last] >= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# runtime-lane frontier: one compile
+# ---------------------------------------------------------------------------
+
+
+def test_fault_frontier_single_compile(fed, fl):
+    """A whole (process × rate) grid is runtime lanes: one _get_runner miss."""
+    cells = [{"fault_process": process_code(p), "failure_prob": r,
+              "fault_util_w": 1.0}
+             for p in PROCESSES for r in (0.05, 0.4)]
+    fl_driver._RUNNER_CACHE.clear()
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=(0,), rounds=4,
+                                   eval_every=2)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 == 1
+    assert len(sweep) == len(cells)
+    # straggler lanes never record failures
+    for c, row in zip(cells, sweep):
+        if c["fault_process"] == process_code("straggler"):
+            assert all(x == 0.0 for r in row for x in r.history["fail"])
+
+
+# ---------------------------------------------------------------------------
+# selection coupling: reliability EMA
+# ---------------------------------------------------------------------------
+
+
+def test_fail_ema_tracks_attempted_failures():
+    fl = FLConfig(n_clients=6)
+    s = sel_lib.init_utility_state(6, key=jax.random.key(0))
+    contrib = jnp.array([1, 0, 0, 0, 1, 0], jnp.float32)   # survivors
+    attempted = jnp.array([1, 1, 0, 0, 1, 0], jnp.float32)  # incl. the failed
+    failed = jnp.array([0, 1, 0, 0, 0, 0], jnp.float32)
+    pre = jnp.full((6,), 2.0)
+    post = jnp.full((6,), 1.0)
+    s2 = sel_lib.update_utility_state(s, contrib, pre, post, fl,
+                                      attempted=attempted, failed=failed)
+    ema = np.asarray(s2.fail_ema)
+    assert ema[1] > 0          # attempted and failed -> reliability drops
+    assert ema[0] == ema[4] == 0.0  # attempted and survived
+    assert (ema[[2, 3, 5]] == 0.0).all()  # not attempted: untouched
+    # legacy call sites (no failed kwarg) leave the EMA alone
+    s3 = sel_lib.update_utility_state(s2, contrib, pre, post, fl)
+    np.testing.assert_array_equal(np.asarray(s3.fail_ema), ema)
+
+
+def test_fault_weight_decays_utility_and_zero_weight_is_bitwise_noop():
+    fl = FLConfig(n_clients=6)
+    s = sel_lib.init_utility_state(6, key=jax.random.key(0))
+    s = s._replace(fail_ema=jnp.array([0, 0.9, 0, 0, 0, 0], jnp.float32))
+    base = sel_lib.compute_utility(s, fl)
+    off = sel_lib.compute_utility(s, fl, fault_w=jnp.asarray(0.0))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(off))
+    on = np.asarray(sel_lib.compute_utility(s, fl, fault_w=jnp.asarray(2.0)))
+    assert on[1] < np.asarray(base)[1]
+    np.testing.assert_array_equal(np.delete(on, 1),
+                                  np.delete(np.asarray(base), 1))
