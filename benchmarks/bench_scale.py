@@ -1,0 +1,150 @@
+"""Population-scale benchmark (ISSUE 6): the cohort engine's sublinear wall.
+
+Sections, written to ``BENCH_scale.json`` at the repo root:
+
+* ``populations`` — one entry per population size (1k / 10k / 100k
+  clients full; 256 / 1k / 4k smoke): lazy generation time, cold compile
+  wall, and the warm per-round wall as a min-of-N execute (repo timing
+  protocol — never a single cold run).  Each ≥100k-client entry is the
+  acceptance criterion's end-to-end round: generation → on-device cohort
+  selection → gathered training → eval readback.
+* ``sublinear`` — the headline gate: warm per-round wall must grow far
+  slower than the population.  The cohort plan's per-round COMPUTE is
+  O(k_max) (selection and the failure processes are the only O(N) terms,
+  and they are elementwise vector ops), so a 100× population may cost
+  only the O(N) vector sliver more — the gate asserts
+  ``wall(N_hi)/wall(N_lo) < (N_hi/N_lo) / 5`` (i.e. at least 5× better
+  than linear scaling end to end).
+* ``memory`` — DESIGN.md §7 accounting vs XLA: the resident per-client
+  bytes predicted by ``core/scale.py`` next to the compiled program's
+  measured ``argument_size_in_bytes``, plus the auto-chunk policy's
+  decision at a representative budget.
+* always-on correctness: exactly ONE runner-cache miss per population
+  shape (single-compile), repeat calls hit; the smallest and largest
+  populations produce finite accuracies.
+
+``REPRO_SCALE_SMOKE=1`` shrinks the populations and round counts for CI;
+every assertion stays on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import scale as scale_lib
+from repro.data.synthetic import make_population
+from repro.train import fl_driver
+
+from benchmarks import common
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_scale.json")
+
+SMOKE = os.environ.get("REPRO_SCALE_SMOKE", "0") == "1"
+POPULATIONS = (256, 1_024, 4_096) if SMOKE else (1_000, 10_000, 100_000)
+ROUNDS = 4 if SMOKE else 8
+K_MAX = 8 if SMOKE else 16
+MEMBERS = 16 if SMOKE else 32
+POOL = 2_000 if SMOKE else 8_000
+WARM_N = 2 if SMOKE else 3
+SEEDS = (0,) if SMOKE else (0, 1)
+
+
+def scale_fl(n: int) -> FLConfig:
+    return FLConfig(
+        n_clients=n, clients_per_round=K_MAX, k_max=K_MAX, rounds=ROUNDS,
+        local_epochs=2, local_batch=32, local_lr=0.08,
+        fault_tolerance=True, failure_prob=0.05,
+    )
+
+
+def main():
+    report = {"engine_rev": common.ENGINE_REV, "smoke": SMOKE,
+              "device": jax.devices()[0].device_kind,
+              "n_devices": jax.device_count(),
+              "rounds": ROUNDS, "k_max": K_MAX, "seeds": list(SEEDS)}
+
+    misses0 = fl_driver.RUNNER_STATS["misses"]
+    rows = []
+    for n in POPULATIONS:
+        fl = scale_fl(n)
+        t0 = time.time()
+        pop = make_population(0, n_clients=n, pool_samples=POOL,
+                              members_per_client=MEMBERS)
+        gen_s = time.time() - t0
+
+        def run():
+            return fl_driver.run_fl_population(
+                pop, fl, seeds=SEEDS, rounds=ROUNDS, eval_every=ROUNDS)
+
+        t0 = time.time()
+        res = run()
+        cold_s = time.time() - t0
+        warm, walls = common.warm_min(run, WARM_N)
+        acc = float(np.mean([r.accuracy for r in res[0]]))
+        assert np.isfinite(acc), f"non-finite accuracy at N={n}"
+        rows.append({
+            "n_clients": n,
+            "gen_s": round(gen_s, 4),
+            "cold_s": round(cold_s, 4),
+            "warm_s": round(warm, 5),
+            "warm_round_s": round(warm / ROUNDS, 6),
+            "warm_walls_s": [round(w, 5) for w in walls],
+            "accuracy": acc,
+            "resident_bytes": scale_lib.population_resident_bytes(
+                n, MEMBERS, len(SEEDS)),
+        })
+    report["populations"] = rows
+
+    # single-compile: one runner miss per population SHAPE; the warm re-runs
+    # above were all cache hits
+    misses = fl_driver.RUNNER_STATS["misses"] - misses0
+    assert misses == len(POPULATIONS), (
+        f"expected one compile per population shape "
+        f"({len(POPULATIONS)}), saw {misses}")
+    report["runner_stats"] = dict(fl_driver.RUNNER_STATS)
+
+    # the sublinear gate: end-to-end per-round wall must beat linear
+    # scaling by at least 5x across the full population span
+    lo, hi = rows[0], rows[-1]
+    pop_ratio = hi["n_clients"] / lo["n_clients"]
+    wall_ratio = hi["warm_round_s"] / max(lo["warm_round_s"], 1e-9)
+    gate = wall_ratio < pop_ratio / 5.0
+    report["sublinear"] = {
+        "pop_ratio": pop_ratio,
+        "wall_ratio": round(wall_ratio, 3),
+        "bound": pop_ratio / 5.0,
+        "ok": bool(gate),
+    }
+    assert gate, (
+        f"population engine wall is not sublinear: {wall_ratio:.1f}x wall "
+        f"for {pop_ratio:.0f}x clients (bound {pop_ratio / 5.0:.1f}x)")
+
+    # DESIGN.md §7 accounting vs the compiled program's measured inputs
+    n_big = rows[-1]["n_clients"]
+    budget = 256 * 1024 * 1024
+    report["memory"] = {
+        "n_clients": n_big,
+        "population_data_bytes": scale_lib.population_data_bytes(
+            n_big, MEMBERS),
+        "carry_bytes_per_lane": scale_lib.population_carry_bytes(n_big),
+        "selection_transient_bytes": scale_lib.selection_transient_bytes(
+            n_big),
+        "cohort_batch_bytes": scale_lib.cohort_batch_bytes(
+            K_MAX, 2, 32, 42),
+        "auto_chunks_at_256MiB": scale_lib.auto_chunks(
+            n_big, budget, MEMBERS, len(SEEDS)),
+    }
+
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report["sublinear"], indent=1))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -334,6 +334,178 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
 
 
 # ---------------------------------------------------------------------------
+# client_cohort plan (population scale: train the gathered cohort only)
+# ---------------------------------------------------------------------------
+
+
+class CohortMetrics(NamedTuple):
+    """Round metrics in cohort form: ``[k_max]``-shaped where
+    :class:`RoundMetrics` was ``[n_clients]``-shaped.  At 10^5+ clients
+    the dense form would emit O(N) per round; the driver only ever needs
+    the cohort rows plus population scalars."""
+
+    cohort_idx: jnp.ndarray    # [k_max] i32 selected client ids
+    take: jnp.ndarray          # [k_max] f32 live-slot mask (rank < k_eff)
+    failed: jnp.ndarray        # [k_max] f32 failure indicator (cohort)
+    slow: jnp.ndarray          # [k_max] f32 straggler stretch (cohort)
+    pre_loss: jnp.ndarray      # [k_max]
+    post_loss: jnp.ndarray     # [k_max]
+    global_loss: jnp.ndarray
+    k_effective: jnp.ndarray
+    update_norms: jnp.ndarray  # [k_max]
+    fail_frac: jnp.ndarray     # population-wide failure fraction
+
+
+def make_cohort_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
+                      sample_fn: Callable,
+                      ckpt_every_steps: int = 2,
+                      dp_use_kernel: Optional[bool] = None,
+                      grad_accum: int = 1,
+                      sel_chunks: int = 1):
+    """Build the population-scale round:
+    ``round_step(state, pop, data_key, params=None, update_gate=None) ->
+    (state, CohortMetrics)``.
+
+    Same Algorithm-1 semantics as :func:`make_parallel_round`, restructured
+    so per-round COMPUTE is O(k_max) while only O(N) *vector* work touches
+    the full population (DESIGN.md §7, ARCHITECTURE.md §Scale):
+
+    1. availability, utility scores and the failure processes evaluate as
+       [N] vector ops (shardable over the ``client`` mesh axis);
+    2. :func:`~repro.core.selection.cohort_topk` picks the ceil(k_eff)
+       cohort ON DEVICE from the (sharded) scores — ``sel_chunks`` is the
+       auto-chunking policy's knob (``core/scale.py``), bitwise-neutral;
+    3. ``sample_fn(key, pop, cohort_idx)`` gathers ONLY the cohort's data
+       (the driver closes it over
+       :func:`repro.data.synthetic.sample_cohort_batches`);
+    4. local training / DP / aggregation run over the k_max cohort slots;
+    5. per-client carries (utility EMAs, ``fail_ema``, FaultState) update
+       via scatters back into the [N] state — the same
+       ``update_utility_state`` rule the dense plans use.
+
+    ``fl.k_max`` must be a positive static (it sizes the cohort): the
+    dense plans' ``0 -> n_clients`` default would defeat the point at
+    population scale, so it is rejected loudly.  DP noise keys are
+    ``fold_in(k_dp, client_id)`` — a stable per-client stream independent
+    of cohort composition.
+    """
+    score_fn = sel_lib.get_score_fn(fl.selection)
+    local_train = _local_train_fn(loss_fn, fl, grad_accum)
+    if not fl.k_max or int(fl.k_max) <= 0:
+        raise ValueError(
+            "the client_cohort plan needs an explicit positive FLConfig."
+            "k_max (it is the static cohort size gathered to the compute "
+            "lanes); the dense default 0 -> n_clients would train the "
+            "whole population")
+    k_max = int(fl.k_max)
+    local_steps = int(fl.local_epochs)
+    default_params = fl_params(fl)
+
+    def round_step(state: RoundState, pop, data_key,
+                   params: Optional[FLParams] = None,
+                   update_gate=None) -> Tuple[RoundState, CohortMetrics]:
+        pr = default_params if params is None else params
+        server = make_server_optimizer(fl.server_opt, pr.server_lr)
+        rng, k_avail, k_sel, k_fail, k_dp = jax.random.split(state.rng, 5)
+
+        # ---- O(N) population vector phase ----
+        avail = jax.random.bernoulli(k_avail, pr.avail_prob,
+                                     (n_clients,)).astype(jnp.float32)
+        utility = sel_lib.compute_utility(state.util, fl,
+                                          fault_w=pr.fault_util_w)
+        k_eff = (state.kctl.k if fl.adaptive_k
+                 else jnp.asarray(float(fl.clients_per_round), jnp.float32))
+        k_eff = jnp.minimum(k_eff, float(k_max))
+        scores = score_fn(k_sel, state.util, utility, avail,
+                          pr.explore_noise)
+        idx, take = sel_lib.cohort_topk(scores, avail, k_eff, k_max,
+                                        chunks=sel_chunks)
+        fail_at_full, slow_full, new_fault = fault_proc.fault_step(
+            state.fault, k_fail, pr, n_clients, local_steps)
+
+        # ---- cohort gather + O(k_max) training phase ----
+        fail_at, slow = fault_proc.gather_cohort(fail_at_full, slow_full, idx)
+        eff_steps, failed = _effective_steps(
+            fail_at, local_steps, ckpt_every_steps, fl.fault_tolerance)
+        batches = sample_fn(data_key, pop, idx)
+        deltas, pre_loss, post_loss = jax.vmap(
+            local_train, in_axes=(None, 0, 0, None)
+        )(state.params, batches, eff_steps, pr.local_lr)
+
+        if fl.dp_enabled:
+            sigma = _dp_sigma(fl, pr)
+            keys = jax.vmap(lambda c: jax.random.fold_in(k_dp, c))(idx)
+
+            def privatize(d, k):
+                return dp_lib.privatize_update(
+                    d, k, mode=fl.dp_mode, clip=pr.dp_clip, sigma=sigma,
+                    use_kernel=dp_use_kernel,
+                )
+
+            deltas, norms = jax.vmap(privatize)(deltas, keys)
+        else:
+            norms = jax.vmap(dp_lib.global_norm)(deltas)
+
+        contrib = take * (eff_steps > 0)
+        agg_delta = agg.aggregate_stacked(deltas, contrib,
+                                          state.util.data_size[idx])
+        new_params, new_server_state = agg.apply_server_update(
+            server, state.params, state.server_opt_state, agg_delta)
+        new_params, new_server_state = _gate_server_update(
+            update_gate, new_params, new_server_state, state)
+
+        if fl.coherence_scoring:
+            def _dot(a, b):
+                return sum(
+                    jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+                    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+            agg_norm = jnp.sqrt(jnp.maximum(_dot(agg_delta, agg_delta),
+                                            1e-18))
+
+            def _coh(delta_i):
+                num = sum(
+                    jnp.sum(d.astype(jnp.float32) * g.astype(jnp.float32))
+                    for d, g in zip(jax.tree.leaves(delta_i),
+                                    jax.tree.leaves(agg_delta)))
+                nrm = jnp.sqrt(jnp.maximum(_dot(delta_i, delta_i), 1e-18))
+                return num / (nrm * agg_norm)
+
+            coherence_c = jax.vmap(_coh)(deltas) * contrib
+        else:
+            coherence_c = None
+
+        # ---- scatter back into the [N] carries ----
+        def scatter(vals_c):
+            return jnp.zeros((n_clients,), jnp.float32).at[idx].add(vals_c)
+
+        sel_full = scatter(take)
+        contrib_full = scatter(contrib)
+        failed_f = failed.astype(jnp.float32)
+        sel_denom = jnp.maximum(jnp.sum(contrib), 1.0)
+        global_loss = jnp.sum(post_loss * contrib) / sel_denom
+        util = sel_lib.update_utility_state(
+            state.util, contrib_full,
+            scatter(pre_loss * contrib), scatter(post_loss * contrib), fl,
+            coherence=None if coherence_c is None else scatter(coherence_c),
+            attempted=sel_full, failed=scatter(failed_f * take))
+        kctl = sel_lib.update_k(state.kctl, global_loss, fl,
+                                tol=pr.k_tol, patience=pr.k_patience)
+
+        new_state = RoundState(new_params, new_server_state, util, kctl,
+                               state.round_idx + 1, rng, new_fault)
+        metrics = CohortMetrics(
+            cohort_idx=idx, take=take, failed=failed_f * take,
+            slow=slow, pre_loss=pre_loss, post_loss=post_loss,
+            global_loss=global_loss, k_effective=k_eff, update_norms=norms,
+            fail_frac=jnp.mean((fail_at_full < local_steps)
+                               .astype(jnp.float32)))
+        return new_state, metrics
+
+    return round_step
+
+
+# ---------------------------------------------------------------------------
 # client_serial plan (for >=8B models; whole mesh per client)
 # ---------------------------------------------------------------------------
 

@@ -114,6 +114,15 @@ def compute_utility(state: UtilityState, fl: FLConfig,
 # mask [n].  ``explore`` is the RUNTIME selection temperature (Gumbel noise
 # scale, FLParams.explore_noise): a traced scalar is fine, so temperature
 # sweeps never recompile.
+#
+# Each strategy is a SCORE function (key, state, utility, avail, explore)
+# -> scores [n] plus the shared top-k masking.  The split exists for the
+# population engine: at 10^5+ clients the cohort plan consumes the scores
+# directly (``cohort_topk`` → gather), never materialising dense masks per
+# round — while the dense ``sel_*`` wrappers below compose the SAME score
+# functions with ``_topk_mask``, op for op what they inlined before the
+# split, so default small-N lanes stay bitwise unchanged (ENGINE_REV
+# models4; tests/test_engine.py pins the engine against the legacy oracle).
 # ---------------------------------------------------------------------------
 
 
@@ -129,29 +138,54 @@ def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k_eff, k_max: int):
     return mask * (avail > 0)
 
 
-def sel_adaptive_utility(key, state, utility, avail, k_eff, k_max,
-                         explore=0.05):
-    """Ours: top-K by utility with ε-greedy exploration noise."""
-    noise = explore * jax.random.gumbel(key, utility.shape)
-    return _topk_mask(utility + noise, avail, k_eff, k_max)
+def score_adaptive_utility(key, state, utility, avail, explore=0.05):
+    """Ours: utility with ε-greedy Gumbel exploration noise."""
+    return utility + explore * jax.random.gumbel(key, utility.shape)
 
 
-def sel_random(key, state, utility, avail, k_eff, k_max, explore=0.05):
-    scores = jax.random.uniform(key, utility.shape)
-    return _topk_mask(scores, avail, k_eff, k_max)
+def score_random(key, state, utility, avail, explore=0.05):
+    return jax.random.uniform(key, utility.shape)
 
 
-def sel_acfl(key, state, utility, avail, k_eff, k_max, explore=0.05):
+def score_acfl(key, state, utility, avail, explore=0.05):
     """ACFL-style active selection: uncertainty sampling — prefer clients
     with high loss level & variance (most informative)."""
     uncertainty = state.loss_ema + jnp.sqrt(jnp.maximum(state.loss_var, 0.0))
-    noise = explore * jax.random.gumbel(key, utility.shape)
-    return _topk_mask(uncertainty + noise, avail, k_eff, k_max)
+    return uncertainty + explore * jax.random.gumbel(key, utility.shape)
+
+
+def score_adafl(key, state, utility, avail, explore=0.05):
+    """AdaFL: current + historical contribution, no cost/staleness terms."""
+    hist = state.perf_ema + 0.1 * state.participation / jnp.maximum(
+        jnp.max(state.participation), 1.0
+    )
+    return hist + explore * jax.random.gumbel(key, utility.shape)
+
+
+def sel_adaptive_utility(key, state, utility, avail, k_eff, k_max,
+                         explore=0.05):
+    """Ours: top-K by utility with ε-greedy exploration noise."""
+    return _topk_mask(score_adaptive_utility(key, state, utility, avail,
+                                             explore), avail, k_eff, k_max)
+
+
+def sel_random(key, state, utility, avail, k_eff, k_max, explore=0.05):
+    return _topk_mask(score_random(key, state, utility, avail, explore),
+                      avail, k_eff, k_max)
+
+
+def sel_acfl(key, state, utility, avail, k_eff, k_max, explore=0.05):
+    return _topk_mask(score_acfl(key, state, utility, avail, explore),
+                      avail, k_eff, k_max)
 
 
 def sel_power_of_choice(key, state, utility, avail, k_eff, k_max,
                         explore=0.05):
-    """Power-of-choice: sample d=2·k_max candidates, keep highest-loss K."""
+    """Power-of-choice: sample d=2·k_max candidates, keep highest-loss K.
+
+    The candidate stage needs k_max, so it has no plain score function —
+    the population engine composes its own two-stage cohort_topk instead.
+    """
     d = min(2 * k_max, avail.shape[0])
     cand = _topk_mask(jax.random.uniform(key, utility.shape), avail, d, d)
     scores = jnp.where(cand > 0, state.loss_ema, jnp.finfo(jnp.float32).min)
@@ -159,12 +193,91 @@ def sel_power_of_choice(key, state, utility, avail, k_eff, k_max,
 
 
 def sel_adafl(key, state, utility, avail, k_eff, k_max, explore=0.05):
-    """AdaFL: current + historical contribution, no cost/staleness terms."""
-    hist = state.perf_ema + 0.1 * state.participation / jnp.maximum(
-        jnp.max(state.participation), 1.0
-    )
-    noise = explore * jax.random.gumbel(key, utility.shape)
-    return _topk_mask(hist + noise, avail, k_eff, k_max)
+    return _topk_mask(score_adafl(key, state, utility, avail, explore),
+                      avail, k_eff, k_max)
+
+
+_SCORES = {
+    "adaptive_utility": score_adaptive_utility,
+    "random": score_random,
+    "acfl": score_acfl,
+    "adafl": score_adafl,
+}
+
+
+def get_score_fn(name: str) -> Callable:
+    """Score function for the population engine's cohort plan.  Strategies
+    whose selection is not a single score pass (power_of_choice) are not
+    cohort-plan capable and raise."""
+    try:
+        return _SCORES[name]
+    except KeyError:
+        raise ValueError(
+            f"selection strategy {name!r} has no score function — the "
+            f"population cohort plan supports {tuple(_SCORES)}") from None
+
+
+def cohort_strategy_names():
+    return tuple(_SCORES)
+
+
+# ---------------------------------------------------------------------------
+# On-device cohort sampling (the population engine, ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def cohort_topk(scores: jnp.ndarray, avail: jnp.ndarray, k_eff, k_max: int,
+                chunks: int = 1):
+    """Top-``k_max`` cohort of a (possibly huge, possibly sharded) score
+    vector: ``(idx [k_max] i32, take [k_max] f32)``.
+
+    The index form of :func:`_topk_mask` — ``zeros(n).at[idx].add(take)``
+    reproduces its dense mask exactly (pinned in tests/test_scale.py) —
+    but the engine consumes ``idx`` directly: gather the ceil(k_eff)
+    cohort's membership/state to the compute lanes instead of training all
+    N clients against a mask.  ``take`` zeroes both the ranks at or above
+    the dynamic ``k_eff`` and any slot that fell to an unavailable client
+    (possible when k_eff exceeds the number available).
+
+    ``chunks`` > 1 splits the score scan into equal pieces and merges the
+    per-chunk top-k — the auto-chunking policy (``core/scale.py``) uses it
+    to bound the selection working set when N-shaped f32 temporaries
+    exceed the per-device budget.  The merge is BITWISE the unchunked
+    selection: ``lax.top_k`` breaks ties by lower index, and the merged
+    candidate list is ordered chunk-major then index-major, which is
+    exactly global index order among equal values.
+    """
+    neg = jnp.finfo(jnp.float32).min
+    masked = jnp.where(avail > 0, scores, neg)
+    n = masked.shape[0]
+    chunks = int(chunks)
+    if chunks > 1 and n % chunks == 0 and n // chunks >= k_max:
+        per = n // chunks
+        v, i = jax.lax.top_k(masked.reshape(chunks, per), k_max)
+        i = i + (jnp.arange(chunks, dtype=i.dtype) * per)[:, None]
+        vals, j = jax.lax.top_k(v.reshape(-1), k_max)
+        idx = i.reshape(-1)[j]
+    else:
+        vals, idx = jax.lax.top_k(masked, k_max)
+    ranks = jnp.arange(k_max)
+    take = (ranks < k_eff).astype(jnp.float32) * (vals > neg)
+    return idx.astype(jnp.int32), take
+
+
+def cohort_topk_host(scores, avail, k_eff: float, k_max: int):
+    """Host-side NumPy reference draw for :func:`cohort_topk` — same
+    tie-breaking (stable sort ≡ ``lax.top_k``'s lower-index-first), same
+    availability masking.  The property tests pin the on-device cohort
+    against this bitwise at small N (tests/test_scale.py)."""
+    import numpy as np
+    scores = np.asarray(scores, np.float32)
+    avail = np.asarray(avail)
+    neg = np.finfo(np.float32).min
+    masked = np.where(avail > 0, scores, neg).astype(np.float32)
+    idx = np.argsort(-masked, kind="stable")[:k_max]
+    take = ((np.arange(k_max) < k_eff) & (masked[idx] > neg)).astype(
+        np.float32)
+    return idx.astype(np.int32), take
 
 
 _STRATEGIES = {

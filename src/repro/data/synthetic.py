@@ -417,3 +417,203 @@ def sample_round_batches(key, stack: StackedFederation, local_steps: int,
 
     xs, ys = jax.vmap(per_client)(keys, stack.x, stack.y, stack.sizes)
     return {"x": xs, "y": ys}
+
+
+# ---------------------------------------------------------------------------
+# Population-scale federation (ISSUE 6): lazy client shards over a shared
+# sample pool, consumed by the cohort engine in train/fl_driver.py
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Population:
+    """A 10^5–10^6-client federation without 10^5 materialised shards.
+
+    :class:`StackedFederation` pads every client's samples into
+    ``[n_clients, max_n, d]`` — perfect at 8–40 clients, hopeless at 100k
+    (100k × 500 × 42 f32 ≈ 8.4 GB before training starts).  A Population
+    stores the DISTRIBUTION structure instead:
+
+    * ``pool_x/pool_y`` — one shared sample pool (O(pool), not O(N));
+    * ``member_idx [N, m] i32`` — each client's shard as rows into the
+      pool (the lazy "materialisation": 100k × 32 i32 ≈ 13 MB);
+    * ``member_size [N]`` — valid prefix per client (size heterogeneity);
+    * per-client covariate shift applied ON DEVICE at batch-sampling time
+      from ``fold_in(shift_key, client_id)`` — zero resident bytes for
+      the one per-client tensor that scales with d.
+
+    The per-client axis (``member_idx``, ``member_size``, ``data_size``,
+    ``data_quality``) is what the population engine shards over the
+    ``client`` mesh axis (``models/sharding.py::population_shardings``);
+    the pool and test set replicate.  Registered as a pytree so the
+    compiled engine takes it as a runtime argument like a
+    StackedFederation; ``shapes()`` is the runner-cache fingerprint.
+    Memory accounting for all of this lives in ``core/scale.py``
+    (DESIGN.md §7).
+    """
+
+    pool_x: jnp.ndarray        # [pool, d] f32 shared sample pool (train)
+    pool_y: jnp.ndarray        # [pool] i32
+    member_idx: jnp.ndarray    # [n_clients, m] i32 rows into the pool
+    member_size: jnp.ndarray   # [n_clients] i32 valid members (<= m)
+    data_size: jnp.ndarray     # [n_clients] f32 normalised shard size
+    data_quality: jnp.ndarray  # [n_clients] f32 label-entropy proxy
+    shift_key: jnp.ndarray     # PRNG key: per-client covariate shift seed
+    test_x: jnp.ndarray        # [n_test, d] f32
+    test_y: jnp.ndarray        # [n_test] i32
+    feature_shift: float = 0.15
+    feature_shape: Optional[Tuple[int, ...]] = None
+
+    @property
+    def n_clients(self) -> int:
+        return self.member_idx.shape[0]
+
+    @property
+    def n_features(self) -> int:
+        return self.pool_x.shape[1]
+
+    @property
+    def n_classes(self) -> int:
+        return 2
+
+    @property
+    def members_per_client(self) -> int:
+        return self.member_idx.shape[1]
+
+    def shapes(self) -> Tuple:
+        """Static fingerprint for compiled-program reuse."""
+        leaves = (self.pool_x, self.pool_y, self.member_idx,
+                  self.member_size, self.data_size, self.data_quality,
+                  self.test_x, self.test_y)
+        return (tuple((l.shape, str(l.dtype)) for l in leaves),
+                self.feature_shift, self.feature_shape)
+
+
+jax.tree_util.register_dataclass(
+    Population,
+    data_fields=("pool_x", "pool_y", "member_idx", "member_size",
+                 "data_size", "data_quality", "shift_key",
+                 "test_x", "test_y"),
+    meta_fields=("feature_shift", "feature_shape"),
+)
+
+
+def make_population(
+    seed: int,
+    dataset: str = "unsw",
+    n_clients: int = 100_000,
+    pool_samples: int = 8_000,
+    members_per_client: int = 32,
+    alpha: float = 0.5,
+    test_frac: float = 0.25,
+    feature_shift: float = 0.15,
+    chunk_clients: int = 16_384,
+) -> Population:
+    """Generate a :class:`Population` lazily: the client axis is built in
+    ``chunk_clients``-sized NumPy chunks (membership draws, row shuffles,
+    entropy) so peak host memory is O(chunk × m), never O(N × samples) —
+    a million-client population streams through ~64 chunks.
+
+    Non-IID structure matches :func:`make_federated` in kind: per-client
+    Beta(α, α) label propensity (the binary Dirichlet) decides each
+    client's attack share, membership rows are drawn from the matching
+    class buckets of the pool, and the per-client covariate shift is
+    deferred to on-device sampling (``sample_cohort_batches``) via
+    ``fold_in(shift_key, client_id)``.
+    """
+    rng = np.random.default_rng(seed)
+    feature_shape = None
+    if dataset == "unsw":
+        X, _, y = unsw_nb15_like(rng, pool_samples)
+    elif dataset == "road":
+        X, y, _ = road_like(rng, pool_samples)
+    elif dataset == "road_raw":
+        window, n_signals = 64, 6
+        X, y, _ = road_like(rng, pool_samples, window=window,
+                            n_signals=n_signals, raw=True)
+        feature_shape = (window, n_signals)
+    else:
+        raise ValueError(dataset)
+    n_test = int(len(X) * test_frac)
+    perm = rng.permutation(len(X))
+    test_i, train_i = perm[:n_test], perm[n_test:]
+    Xtr, ytr = X[train_i], y[train_i]
+
+    buckets = [np.flatnonzero(ytr == c) for c in (0, 1)]
+    if any(len(b) == 0 for b in buckets):
+        raise ValueError("pool has an empty class — enlarge pool_samples")
+
+    m = int(members_per_client)
+    member_size = rng.integers(max(m // 2, 1), m + 1,
+                               n_clients).astype(np.int32)
+    member_idx = np.empty((n_clients, m), np.int32)
+    quality = np.empty((n_clients,), np.float32)
+    for lo in range(0, n_clients, chunk_clients):
+        hi = min(lo + chunk_clients, n_clients)
+        c = hi - lo
+        p1 = rng.beta(alpha, alpha, c)                    # binary Dirichlet
+        n1 = rng.binomial(m, p1)
+        cols = np.arange(m)[None, :]
+        is1 = cols < n1[:, None]                          # [c, m] class plan
+        rows = np.where(
+            is1,
+            buckets[1][rng.integers(0, len(buckets[1]), (c, m))],
+            buckets[0][rng.integers(0, len(buckets[0]), (c, m))],
+        )
+        # shuffle within each row so the member_size prefix stays a fair
+        # mix of the client's classes
+        order = rng.random((c, m)).argsort(axis=1)
+        rows = np.take_along_axis(rows, order, axis=1)
+        member_idx[lo:hi] = rows
+        lab = ytr[rows]                                   # [c, m]
+        valid = cols < member_size[lo:hi][:, None]
+        p = (lab * valid).sum(1) / np.maximum(member_size[lo:hi], 1)
+        p = np.clip(p, 1e-9, 1 - 1e-9)
+        quality[lo:hi] = -(p * np.log(p) + (1 - p) * np.log(1 - p)) / np.log(2)
+
+    sizes = member_size.astype(np.float32)
+    return Population(
+        pool_x=jnp.asarray(Xtr),
+        pool_y=jnp.asarray(ytr.astype(np.int32)),
+        member_idx=jnp.asarray(member_idx),
+        member_size=jnp.asarray(member_size),
+        data_size=jnp.asarray(sizes / sizes.mean()),
+        data_quality=jnp.asarray(quality),
+        shift_key=jax.random.key(np.uint32(seed) ^ np.uint32(0x5CA1E)),
+        test_x=jnp.asarray(X[test_i]),
+        test_y=jnp.asarray(y[test_i].astype(np.int32)),
+        feature_shift=float(feature_shift),
+        feature_shape=feature_shape,
+    )
+
+
+def sample_cohort_batches(key, pop: Population, cohort_idx,
+                          local_steps: int, batch: int) -> Dict[str, jnp.ndarray]:
+    """The cohort gather: batches for the SELECTED clients only, leaves
+    ``[k_max, local_steps, batch, ...]`` — per-round data traffic is
+    O(k_max · steps · batch · d), independent of the population size
+    (that independence is the population engine's sublinear-wall claim,
+    gated in benchmarks/bench_scale.py).
+
+    Each cohort slot gathers its membership row, draws uniform
+    with-replacement sample indices from its valid prefix, gathers those
+    pool rows, and adds the client's covariate shift — generated on the
+    fly from ``fold_in(shift_key, client_id)``, so the shift is a stable
+    per-client property that never occupies [N, d] resident memory.
+    """
+    k = cohort_idx.shape[0]
+    keys = jax.random.split(key, k)
+    d = pop.pool_x.shape[1]
+    mem = pop.member_idx[cohort_idx]
+    msize = pop.member_size[cohort_idx]
+
+    def per_slot(kk, mem_i, size_i, ci):
+        j = jax.random.randint(kk, (local_steps, batch), 0,
+                               jnp.maximum(size_i, 1))
+        rows = mem_i[j]
+        shift = pop.feature_shift * jax.random.normal(
+            jax.random.fold_in(pop.shift_key, ci), (d,))
+        return pop.pool_x[rows] + shift, pop.pool_y[rows]
+
+    xs, ys = jax.vmap(per_slot)(keys, mem, msize, cohort_idx)
+    return {"x": xs, "y": ys}

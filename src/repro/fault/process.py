@@ -158,3 +158,13 @@ def fault_step(state: FaultState, k_fail, pr, n: int,
     new_state = FaultState(down=down_next.astype(jnp.float32),
                            age=jnp.where(fail_w, 0.0, a + 1.0))
     return fail_at, slow, new_state
+
+
+def gather_cohort(fail_at, slow, cohort_idx):
+    """Cohort view of one round's process outputs (the population engine,
+    ARCHITECTURE.md §Scale): the processes evolve the FULL [n] population
+    every round — elementwise vector work that shards over the ``client``
+    mesh axis, and the only semantics under which Markov bursts persist
+    and Weibull ages accumulate for clients the cohort skipped — while
+    training consumes only the gathered ``[k_max]`` rows."""
+    return fail_at[cohort_idx], slow[cohort_idx]

@@ -27,6 +27,46 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))
 
 
+def scale_mesh_shape(n_devices: int, n_lanes: int):
+    """(lane, client) factorisation for :func:`make_scale_mesh`.
+
+    Lanes are embarrassingly parallel (independent trials), so the lane
+    axis takes as many devices as it can fill — ``gcd(n_devices,
+    n_lanes)``-ish: the largest divisor of ``n_devices`` that is ≤
+    ``n_lanes`` — and the remaining factor shards the client axis.  One
+    device degenerates to (1, 1): the program is identical unsharded.
+    """
+    lane = 1
+    for d in range(min(n_devices, max(n_lanes, 1)), 0, -1):
+        if n_devices % d == 0:
+            lane = d
+            break
+    return lane, n_devices // lane
+
+
+def make_scale_mesh(n_lanes: int = 1, shape=None):
+    """2-D ``(lane, client)`` mesh for the population engine (ISSUE 6):
+    the sweep's seed×config lane axis extends PR 2's 1-D lane mesh, and
+    the new ``client`` axis shards every per-client [N] array — the
+    Population membership table, the UtilityState/FaultState carries and
+    the selection score buffers (``models/sharding.py::
+    population_shardings``).  ``shape=(lane, client)`` overrides the
+    automatic factorisation (tests pin specific layouts); ``None`` on a
+    single device returns ``None`` — callers compile the identical
+    unsharded program.
+    """
+    devices = jax.devices()
+    if shape is None:
+        shape = scale_mesh_shape(len(devices), n_lanes)
+    lane, client = shape
+    if lane * client <= 1:
+        return None
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[: lane * client]).reshape(lane, client),
+        ("lane", "client"))
+
+
 # TPU v5e per-chip constants (roofline terms, EXPERIMENTS.md §Roofline)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # bytes/s

@@ -133,6 +133,49 @@ def make_rules(plan: str, multi_pod: bool) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Population engine (ISSUE 6): the 2-D lane × client scale mesh
+# ---------------------------------------------------------------------------
+
+# client_cohort plan over launch/mesh.py::make_scale_mesh — logical axes:
+#   "clients"  the population axis of every per-client [N] array
+#   "lanes"    the sweep's seed×config trial axis
+# Model params replicate (the detectors are tiny relative to the
+# population state; the cohort gathered for training is k_max-small and
+# replicates too).
+RULES_POPULATION = {
+    "clients": ("client",),
+    "lanes": ("lane",),
+}
+
+
+def population_shardings(mesh: Mesh, pop):
+    """Shardings for a :class:`repro.data.synthetic.Population` on a
+    ``(lane, client)`` scale mesh: per-client arrays (membership table,
+    sizes, quality) shard over ``client``; the shared pool, the test set
+    and the shift key replicate.  Row-sharding ``member_idx`` is what
+    makes a 10^6-client membership table fit — each device holds
+    N/client_shards rows — while the cohort gather stays a plain [k_max]
+    gather (GSPMD inserts the collective)."""
+    per_client = NamedSharding(mesh, P("client"))
+    replicated = NamedSharding(mesh, P())
+    return type(pop)(
+        pool_x=replicated, pool_y=replicated,
+        member_idx=per_client, member_size=per_client,
+        data_size=per_client, data_quality=per_client,
+        shift_key=replicated,
+        test_x=replicated, test_y=replicated,
+        feature_shift=pop.feature_shift, feature_shape=pop.feature_shape,
+    )
+
+
+def lane_shardings(mesh: Mesh):
+    """(lane-sharded, replicated) NamedShardings for per-lane inputs (seed
+    keys, FLParams lanes) on the scale mesh — the 2-D analogue of the
+    sweep engine's 1-D lane sharding."""
+    return (NamedSharding(mesh, P("lane")), NamedSharding(mesh, P()))
+
+
+# ---------------------------------------------------------------------------
 # Conversions
 # ---------------------------------------------------------------------------
 

@@ -75,9 +75,13 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.configs.base import (FLConfig, FLParams, fl_params, fl_static)
 from repro.core import fault as fault_lib
 from repro.core import rounds as rounds_lib
-from repro.data.synthetic import (FederatedData, StackedFederation,
-                                  round_batches, sample_round_batches,
-                                  stack_federation)
+from repro.core import scale as scale_lib
+from repro.data.synthetic import (FederatedData, Population,
+                                  StackedFederation, round_batches,
+                                  sample_cohort_batches,
+                                  sample_round_batches, stack_federation)
+from repro.launch.mesh import make_scale_mesh
+from repro.models import sharding as shard_lib
 from repro.models.mlp import auc_roc, auc_roc_jnp
 from repro.models.spec import DataMeta, ModelSpec, get_model_spec, meta_for
 from repro.privacy import accountant as acct_lib
@@ -465,6 +469,27 @@ def _lane_sharding(n_lanes: int):
             NamedSharding(mesh, PartitionSpec()))
 
 
+def _sweep_cells(fl: FLConfig, params_grid: Sequence,
+                 method: str) -> List[FLConfig]:
+    """Resolve a params_grid into per-cell FLConfigs sharing ``fl``'s
+    statics (shared by the sweep and population engines)."""
+    cells: List[FLConfig] = []
+    for p in params_grid:
+        if isinstance(p, FLConfig):
+            cell = fl_for_method(p, method)
+        elif isinstance(p, FLParams):
+            cell = dataclasses.replace(fl, **p._asdict())
+        else:
+            cell = dataclasses.replace(fl, **dict(p))
+        if fl_static(cell) != fl_static(fl):
+            raise ValueError(
+                "params_grid cell differs from the base config in a STATIC "
+                "field — those gate code structure and cannot ride the "
+                f"runtime lane axis: {cell}")
+        cells.append(cell)
+    return cells
+
+
 def _params_lanes(cells: Sequence[FLConfig], n_seeds: int) -> FLParams:
     """Stack each cell's runtime params into [n_cells·n_seeds] f32 lanes
     (cell-major: lane = cell_index * n_seeds + seed_index)."""
@@ -509,20 +534,7 @@ def run_fl_sweep(
     fl = fl_for_method(fl, method)
     rounds = int(rounds or fl.rounds)
     seeds = [int(s) for s in seeds]
-    cells: List[FLConfig] = []
-    for p in params_grid:
-        if isinstance(p, FLConfig):
-            cell = fl_for_method(p, method)
-        elif isinstance(p, FLParams):
-            cell = dataclasses.replace(fl, **p._asdict())
-        else:
-            cell = dataclasses.replace(fl, **dict(p))
-        if fl_static(cell) != fl_static(fl):
-            raise ValueError(
-                "params_grid cell differs from the base config in a STATIC "
-                "field — those gate code structure and cannot ride the "
-                f"runtime lane axis: {cell}")
-        cells.append(cell)
+    cells = _sweep_cells(fl, params_grid, method)
     if not cells:
         return []
 
@@ -634,6 +646,306 @@ def run_fl(
     return run_fl_batch(fed, fl, method, seeds=(seed,), rounds=rounds,
                         eval_every=eval_every, dataset=dataset,
                         hidden=hidden)[0]
+
+
+# ---------------------------------------------------------------------------
+# Population engine (ISSUE 6): cohort training over a sharded client axis
+# ---------------------------------------------------------------------------
+
+
+def _build_population_run(fl: FLConfig, rounds: int, eval_every: int,
+                          meta: DataMeta, sel_chunks: int):
+    """``single_run(key, pop, params) -> (final_params, sim_time, trace)``
+    over a :class:`~repro.data.synthetic.Population` — the population-scale
+    sibling of :func:`_build_single_run` (ARCHITECTURE.md §Scale).
+
+    Same nested-scan structure, same scheduled-privacy carry, but the round
+    step is the ``client_cohort`` plan
+    (:func:`repro.core.rounds.make_cohort_round`): per-round COMPUTE is
+    O(k_max) — only the top-k cohort's data/state is gathered to the
+    compute lanes — while O(N) work is limited to elementwise vector ops
+    that shard over the ``client`` mesh axis.  Every per-round emission is
+    a SCALAR (loss, k, population failure fraction, σ, live): at 10^5+
+    clients an [N]-shaped ys column would dominate memory, so the per-round
+    trace never materialises the population axis.
+
+    The cohort time model waits for the slowest *selected* client:
+    :func:`simulate_round_time` reads compute capacities through a
+    cohort-gathered view of the utility state, with the cohort-shaped
+    ``take``/``failed``/``slow`` columns from :class:`CohortMetrics`.
+    """
+    n_full, rem = divmod(rounds, eval_every)
+    scheduled = fl.dp_enabled and fl.dp_scheduled
+    if scheduled and fl.dp_mode != "clipped":
+        raise ValueError(
+            "dp_scheduled requires dp_mode='clipped': the accountant "
+            "composes z_t = sigma_t/dp_clip, which is only a valid "
+            "(epsilon, delta) statement when updates are clipped to dp_clip")
+    spec = get_model_spec(fl.model, meta)
+    k_cap = float(int(fl.k_max))
+
+    def single_run(key, pop: Population, pr: FLParams):
+        n_clients = pop.n_clients
+
+        def sample_fn(k, p, idx):
+            return sample_cohort_batches(k, p, idx, fl.local_epochs,
+                                         fl.local_batch)
+
+        round_step = rounds_lib.make_cohort_round(
+            spec.loss, fl, n_clients, sample_fn, sel_chunks=sel_chunks)
+        tx, ty = pop.test_x, pop.test_y
+        k_static = jnp.asarray(float(fl.clients_per_round), jnp.float32)
+
+        def one_round(carry, _):
+            if scheduled:
+                state, data_key, cum_time, acct, sched = carry
+            else:
+                state, data_key, cum_time = carry
+            data_key, k_batch = jax.random.split(data_key)
+            if scheduled:
+                k_eff = state.kctl.k if fl.adaptive_k else k_static
+                # the cohort plan caps the controller at the static cohort
+                # size, so the accountant must see the same realised k
+                k_eff = jnp.minimum(k_eff, k_cap)
+                q_t = realized_cohort_fraction(k_eff, n_clients)
+                z_t = sched_lib.scheduled_multiplier(sched, pr,
+                                                     state.round_idx, rounds)
+                sigma_t = z_t * pr.dp_clip
+                acct_next = acct_lib.accountant_step(acct, z_t, q_t)
+                eps_next = acct_lib.epsilon_from_state(acct_next, fl.dp_delta)
+                live = (eps_next <= pr.dp_budget).astype(jnp.float32)
+                state, m = round_step(state, pop, k_batch,
+                                      pr._replace(dp_sigma=sigma_t),
+                                      update_gate=live)
+                acct = jax.tree.map(lambda a, o: jnp.where(live > 0, a, o),
+                                    acct_next, acct)
+            else:
+                state, m = round_step(state, pop, k_batch, pr)
+            util_view = state.util._replace(
+                compute=state.util.compute[m.cohort_idx])
+            cum_time = cum_time + simulate_round_time(
+                fl, util_view, m.take, m.failed, params=pr, slow=m.slow)
+            if scheduled:
+                return ((state, data_key, cum_time, acct, sched),
+                        (m.global_loss, m.k_effective, m.fail_frac, sigma_t,
+                         live))
+            return ((state, data_key, cum_time),
+                    (m.global_loss, m.k_effective, m.fail_frac))
+
+        def eval_block(carry, block_len):
+            carry, ys = jax.lax.scan(one_round, carry, None, length=block_len)
+            if scheduled:
+                state, data_key, cum_time, acct, sched = carry
+                losses, ks, fails, sigmas, lives = ys
+            else:
+                state, _, cum_time = carry
+                losses, ks, fails = ys
+            acc = spec.accuracy(state.params, tx, ty)
+            proba = spec.predict_proba(state.params, tx)[:, 1]
+            auc = auc_roc_jnp(proba, ty)
+            trace = {
+                "loss": losses[-1],
+                "acc": acc,
+                "auc": auc,
+                "k": ks[-1],
+                "fail": fails[-1],
+                "cum_time": cum_time,
+            }
+            if scheduled:
+                trace["eps"] = acct_lib.epsilon_from_state(acct, fl.dp_delta)
+                trace["sigma"] = sigmas[-1]
+                trace["live"] = jnp.mean(lives)
+                sched = sched_lib.scheduler_update(sched, auc, pr)
+                carry = (state, data_key, cum_time, acct, sched)
+            return carry, trace
+
+        params = spec.init(jax.random.fold_in(key, 0))
+        state = rounds_lib.init_round_state(
+            params, fl, jax.random.fold_in(key, 1), n_clients=n_clients,
+            data_size=pop.data_size, data_quality=pop.data_quality,
+        )
+        carry = (state, jax.random.fold_in(key, 2), jnp.zeros((), jnp.float32))
+        if scheduled:
+            q_nom = jnp.asarray(
+                min(min(fl.clients_per_round, int(fl.k_max)) / n_clients, 1.0),
+                jnp.float32)
+            carry = carry + (
+                acct_lib.init_accountant_state(),
+                sched_lib.init_scheduler(pr.dp_budget, fl.dp_delta, rounds,
+                                         q_nom),
+            )
+        trace = None
+        if n_full:
+            carry, trace = jax.lax.scan(
+                lambda c, _: eval_block(c, eval_every), carry, None,
+                length=n_full)
+        if rem:
+            carry, tail = eval_block(carry, rem)
+            tail = jax.tree.map(lambda x: x[None], tail)
+            trace = tail if trace is None else jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b]), trace, tail)
+        state, _, sim_time = carry[:3]
+        return state.params, sim_time, trace
+
+    return single_run
+
+
+def _get_population_runner(fl: FLConfig, rounds: int, eval_every: int,
+                           meta: DataMeta, n_lanes: int, pop: Population,
+                           sel_chunks: int):
+    """Compiled ``runner(keys[L], pop, params_lanes[L])`` for the population
+    engine.  Shares ``_RUNNER_CACHE``/``RUNNER_STATS`` with the dense sweep
+    engine (a "pop" tag keeps the key spaces disjoint), so the
+    single-compile property is asserted the same way: one miss per
+    (statics, rounds, cadence, shapes, chunk policy), hits thereafter.
+    ``sel_chunks`` is part of the key — it changes the lowered selection
+    loop (bitwise-neutral, but a different program)."""
+    static = fl_static(fl)
+    cache_key = ("pop", static, rounds, eval_every, meta, n_lanes,
+                 pop.shapes(), int(sel_chunks))
+    runner = _RUNNER_CACHE.get(cache_key)
+    if runner is None:
+        RUNNER_STATS["misses"] += 1
+        single_run = _build_population_run(static, rounds, eval_every, meta,
+                                           int(sel_chunks))
+        donate = () if jax.default_backend() == "cpu" else (0, 2)
+        runner = jax.jit(
+            jax.vmap(single_run, in_axes=(0, None, 0)),
+            donate_argnums=donate,
+        )
+        _RUNNER_CACHE[cache_key] = runner
+    else:
+        RUNNER_STATS["hits"] += 1
+    return runner
+
+
+def run_fl_population(
+    pop: Population,
+    fl: FLConfig,
+    params_grid: Optional[Sequence] = None,
+    seeds: Sequence[int] = (0,),
+    method: str = "proposed",
+    rounds: Optional[int] = None,
+    eval_every: int = 10,
+    dataset: str = "unsw",
+    hidden: int = 64,
+    mesh_shape: Optional[tuple] = None,
+    shard: bool = True,
+    sel_chunks: Optional[int] = None,
+    memory_budget_bytes: Optional[int] = None,
+) -> List[List[RunResult]]:
+    """Population-scale front door: a hyper-parameter sweep over a
+    100k+-client :class:`Population` as ONE compiled program.
+
+    The lane semantics mirror :func:`run_fl_sweep` (cells × seeds lanes,
+    results ``[cell][seed]``); the execution differs in three ways
+    (ARCHITECTURE.md §Scale):
+
+    * **client_cohort plan** — each round samples the cohort ON DEVICE
+      (top-``ceil(k_eff)`` over the sharded utility scores) and gathers
+      only those ``fl.k_max`` clients' membership rows and state to the
+      compute lanes, so per-round compute and data traffic are O(k_max),
+      independent of N (the sublinear-wall gate in
+      benchmarks/bench_scale.py).
+    * **2-D lane × client mesh** — :func:`repro.launch.mesh.make_scale_mesh`
+      factorises the devices into (lane, client); lanes shard as in the
+      sweep engine, and every per-client [N] array — the Population's
+      membership table and the UtilityState/FaultState scan carries —
+      shards over ``client`` (``models/sharding.py``).  ``mesh_shape``
+      pins a layout; ``shard=False`` keeps everything replicated (the
+      single-device program, used as the bitwise reference in
+      tests/test_scale.py).
+    * **auto-chunking policy** — when ``memory_budget_bytes`` is given,
+      ``core/scale.auto_chunks`` sizes the selection chunk count so the
+      [N]-shaped selection transients fit the per-device budget left
+      after the resident population state (DESIGN.md §7).  Chunked and
+      unchunked selection are bitwise identical.
+
+    ``fedl2p`` is rejected: its per-client personalisation pass is O(N)
+    host work, which is exactly what this engine exists to avoid.
+    """
+    if method == "fedl2p":
+        raise ValueError(
+            "run_fl_population does not support fedl2p: its host-side "
+            "personalisation fine-tunes every client (O(N) python loop) — "
+            "use the dense engine at dense-federation scale")
+    fl = fl_for_method(fl, method)
+    if not fl.k_max or int(fl.k_max) <= 0:
+        raise ValueError(
+            "run_fl_population needs an explicit positive FLConfig.k_max "
+            "(the static cohort size gathered per round)")
+    rounds = int(rounds or fl.rounds)
+    seeds = [int(s) for s in seeds]
+    cells = _sweep_cells(fl, [fl] if params_grid is None else params_grid,
+                         method)
+    if not cells:
+        return []
+    n_lanes = len(cells) * len(seeds)
+
+    if sel_chunks is None:
+        sel_chunks = 1 if memory_budget_bytes is None else scale_lib.auto_chunks(
+            pop.n_clients, int(memory_budget_bytes),
+            pop.members_per_client, n_lanes)
+
+    mesh = make_scale_mesh(n_lanes, shape=mesh_shape) if shard else None
+    n_padded = n_lanes
+    if mesh is not None:
+        lane_size = mesh.shape["lane"]
+        n_padded = -(-n_lanes // lane_size) * lane_size
+
+    t0 = time.time()
+    meta = meta_for(pop, hidden=hidden)
+    runner = _get_population_runner(fl, rounds, eval_every, meta, n_padded,
+                                    pop, sel_chunks)
+    keys = jax.vmap(jax.random.key)(
+        jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
+    lanes = _params_lanes(cells, len(seeds))
+    if n_padded > n_lanes:
+        pad = n_padded - n_lanes
+        keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, axis=0)])
+        lanes = jax.tree.map(
+            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
+            lanes)
+
+    if mesh is not None:
+        s_lane, _ = shard_lib.lane_shardings(mesh)
+        keys = jax.device_put(keys, s_lane)
+        lanes = jax.tree.map(lambda x: jax.device_put(x, s_lane), lanes)
+        if pop.n_clients % mesh.shape["client"] == 0:
+            pop = jax.device_put(pop, shard_lib.population_shardings(mesh, pop))
+        else:
+            # uneven client axis: replicate rather than shard (correct but
+            # unscaled — pad the population to a device multiple to shard)
+            rep = NamedSharding(mesh, PartitionSpec())
+            pop = jax.device_put(pop, jax.tree.map(lambda _: rep, pop))
+
+    params_b, sim_b, trace_b = runner(keys, pop, lanes)
+    jax.block_until_ready(sim_b)
+    wall_per_lane = (time.time() - t0) / max(n_lanes, 1)
+
+    eval_idx = _eval_rounds(rounds, eval_every)
+    trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
+    sim_np = np.asarray(sim_b)
+    out: List[List[RunResult]] = []
+    for ci, cell in enumerate(cells):
+        scheduled = cell.dp_enabled and cell.dp_scheduled
+        eps_cell = None if scheduled else accounted_epsilon(cell, rounds)
+        row = []
+        for si, seed in enumerate(seeds):
+            lane = ci * len(seeds) + si
+            history = {"round": [r + 1 for r in eval_idx]}
+            for name in trace_np:
+                history[name] = [float(x) for x in trace_np[name][lane]]
+            row.append(RunResult(
+                method=method, dataset=dataset, seed=seed,
+                accuracy=history["acc"][-1], auc=history["auc"][-1],
+                sim_time_s=float(sim_np[lane]), wall_time_s=wall_per_lane,
+                rounds=rounds,
+                eps_spent=history["eps"][-1] if scheduled else eps_cell,
+                history=history,
+            ))
+        out.append(row)
+    return out
 
 
 # ---------------------------------------------------------------------------

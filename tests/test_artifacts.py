@@ -20,7 +20,10 @@ def _have_any():
     return bool(glob.glob(os.path.join(ART, "*__single.json")))
 
 
-@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+@pytest.mark.skipif(
+    not _have_any(),
+    reason="dry-run sweep artifacts absent (generate with: python -m "
+           "repro.launch.dryrun --all --mesh both)")
 @pytest.mark.parametrize("mesh", ["single", "multi"])
 def test_all_40_pairs_have_baseline_artifacts(mesh):
     missing = []
@@ -32,7 +35,10 @@ def test_all_40_pairs_have_baseline_artifacts(mesh):
     assert not missing, f"missing {mesh} baselines: {missing}"
 
 
-@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+@pytest.mark.skipif(
+    not _have_any(),
+    reason="dry-run sweep artifacts absent (generate with: python -m "
+           "repro.launch.dryrun --all --mesh both)")
 def test_artifacts_carry_roofline_fields():
     for p in glob.glob(os.path.join(ART, "*__single.json")):
         with open(p) as f:
@@ -46,7 +52,10 @@ def test_artifacts_carry_roofline_fields():
         assert a["memory"]["temp_bytes"] is not None, p
 
 
-@pytest.mark.skipif(not _have_any(), reason="dry-run sweep not run yet")
+@pytest.mark.skipif(
+    not _have_any(),
+    reason="dry-run sweep artifacts absent (generate with: python -m "
+           "repro.launch.dryrun --all --mesh both)")
 def test_hillclimb_winner_artifacts_exist():
     """The §Perf optimized variants referenced by EXPERIMENTS.md."""
     for tag_file in (

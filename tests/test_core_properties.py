@@ -10,7 +10,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
+hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="optional test extra 'hypothesis' not installed "
+           "(pip install -e .[test])")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import FLConfig

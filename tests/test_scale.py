@@ -1,0 +1,400 @@
+"""Population-engine tests (ISSUE 6): on-device cohort sampling, the
+lane × client mesh, and the DESIGN.md §7 memory budget.
+
+* property tests — the sharded top-k cohort is a permutation-free subset
+  of size ceil(k_eff) drawn from the available clients; at small N it
+  matches the host-side NumPy reference draw BITWISE (same tie-breaking);
+  at large N selection frequencies track the utility ordering.  Driven by
+  hypothesis when it is installed (CI), by seeded random sweeps otherwise
+  (this container has no hypothesis wheel) — the cases run either way.
+* chunked selection — ``cohort_topk(chunks=c)`` is bitwise the unchunked
+  selection for every divisor chunking, and the driver's
+  ``memory_budget_bytes`` auto-chunk policy crosses the 1 → >1 boundary
+  without moving a bit of the results.
+* sharding equivalence — subprocess with 4 XLA-faked CPU devices: the
+  population engine on (4,1)/(2,2)/(1,4) lane×client meshes and the dense
+  sweep engine on its 1-D lane mesh reproduce the single-device run.  All
+  state-carrying history columns (acc/auc/k/fail/cum_time/eps) must match
+  BITWISE; the scalar ``loss`` column is reduction-order sensitive under
+  GSPMD partitioning and gets a tight tolerance instead.
+* memory budget — the ``core/scale.py`` §7 formulas are pinned against
+  the real carry NamedTuples, the real Population buffers, and the
+  compiled runner's measured ``memory_analysis()`` argument bytes.
+* single compile — one runner-cache miss per population shape, hits
+  thereafter (RUNNER_STATS, same discipline as the sweep engine).
+"""
+import math
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import scale as scale_lib
+from repro.core import selection as sel_lib
+from repro.data.synthetic import (Population, make_population,
+                                  sample_cohort_batches)
+from repro.fault.process import FaultState, init_fault_state
+from repro.train import fl_driver
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local containers without the wheel: seeded sweeps
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# property: the on-device cohort draw
+# ---------------------------------------------------------------------------
+
+
+def _random_case(rng, n_max=20):
+    n = int(rng.integers(2, n_max + 1))
+    k_max = int(rng.integers(1, n + 1))
+    k_eff = float(rng.uniform(0.0, k_max + 1.0))
+    scores = rng.normal(size=n).astype(np.float32)
+    if rng.random() < 0.3:  # force ties: tie-breaking must match too
+        scores[: n // 2] = scores[0]
+    avail = (rng.random(n) < 0.8).astype(np.float32)
+    return n, k_max, k_eff, scores, avail
+
+
+def _check_cohort_invariants(n, k_max, k_eff, scores, avail):
+    idx, take = sel_lib.cohort_topk(jnp.asarray(scores), jnp.asarray(avail),
+                                    jnp.asarray(k_eff, jnp.float32), k_max)
+    idx, take = np.asarray(idx), np.asarray(take)
+    taken = idx[take > 0]
+    # a permutation-free subset: no client occupies two live slots
+    assert len(np.unique(taken)) == len(taken)
+    # only available clients are ever taken
+    assert all(avail[i] > 0 for i in taken)
+    # exactly ceil(k_eff) live slots, capped by k_max and availability
+    expect = min(int(math.ceil(k_eff)), k_max, int(avail.sum()))
+    assert len(taken) == expect, (len(taken), expect, k_eff, k_max)
+    # bitwise the host-side reference draw (same tie-breaking)
+    h_idx, h_take = sel_lib.cohort_topk_host(scores, avail, k_eff, k_max)
+    np.testing.assert_array_equal(idx, h_idx)
+    np.testing.assert_array_equal(take, h_take)
+    # the index form reproduces the dense _topk_mask exactly
+    dense = np.zeros(n, np.float32)
+    np.add.at(dense, idx, take)
+    mask = np.asarray(sel_lib._topk_mask(
+        jnp.asarray(scores), jnp.asarray(avail),
+        jnp.asarray(k_eff, jnp.float32), k_max))
+    np.testing.assert_array_equal(dense, mask)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=60)
+    @given(st.integers(0, 2**31 - 1))
+    def test_cohort_topk_matches_host_reference(case_seed):
+        _check_cohort_invariants(
+            *_random_case(np.random.default_rng(case_seed)))
+
+else:
+
+    def test_cohort_topk_matches_host_reference():
+        rng = np.random.default_rng(0)
+        for _ in range(60):
+            _check_cohort_invariants(*_random_case(rng))
+
+
+@pytest.mark.parametrize("chunks", [2, 4, 8, 16])
+def test_chunked_topk_bitwise_equals_unchunked(chunks):
+    rng = np.random.default_rng(1)
+    n, k_max = 128, 8
+    for _ in range(20):
+        scores = rng.normal(size=n).astype(np.float32)
+        scores[:16] = scores[0]  # ties across chunk boundaries
+        avail = (rng.random(n) < 0.85).astype(np.float32)
+        k_eff = float(rng.uniform(0, k_max))
+        i1, t1 = sel_lib.cohort_topk(jnp.asarray(scores), jnp.asarray(avail),
+                                     k_eff, k_max, chunks=1)
+        ic, tc = sel_lib.cohort_topk(jnp.asarray(scores), jnp.asarray(avail),
+                                     k_eff, k_max, chunks=chunks)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(ic))
+        np.testing.assert_array_equal(np.asarray(t1), np.asarray(tc))
+
+
+def test_selection_frequency_tracks_utility():
+    """At large N, clients with higher utility must be selected more often
+    under the adaptive-utility score (exploration noise jitters ranks but
+    cannot invert the ordering in aggregate)."""
+    n, k_max, draws = 512, 32, 200
+    rng = np.random.default_rng(2)
+    utility = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    avail = jnp.ones((n,), jnp.float32)
+    counts = np.zeros(n)
+    for d in range(draws):
+        scores = sel_lib.score_adaptive_utility(
+            jax.random.key(d), None, utility, avail, explore=0.5)
+        idx, take = sel_lib.cohort_topk(scores, avail, float(k_max), k_max)
+        counts[np.asarray(idx)[np.asarray(take) > 0]] += 1
+    freq = counts / draws
+    order = np.argsort(np.asarray(utility))
+    top, bottom = freq[order[-64:]].mean(), freq[order[:64]].mean()
+    assert top > 10 * max(bottom, 1e-3), (top, bottom)
+    # rank correlation, not just the extremes
+    ranks_u = np.argsort(np.argsort(np.asarray(utility)))
+    ranks_f = np.argsort(np.argsort(freq))
+    corr = np.corrcoef(ranks_u, ranks_f)[0, 1]
+    assert corr > 0.6, corr
+
+
+def test_cohort_batches_are_the_clients_own_data():
+    """The gathered batches must come from each cohort client's membership
+    rows (pool rows + that client's deterministic covariate shift)."""
+    pop = make_population(3, n_clients=32, pool_samples=400,
+                          members_per_client=8)
+    cohort = jnp.asarray([5, 17, 2, 30], jnp.int32)
+    b = sample_cohort_batches(jax.random.key(0), pop, cohort, 2, 6)
+    assert b["x"].shape == (4, 2, 6, pop.n_features)
+    assert b["y"].shape == (4, 2, 6)
+    pool_x = np.asarray(pop.pool_x)
+    pool_y = np.asarray(pop.pool_y)
+    for s, ci in enumerate(np.asarray(cohort)):
+        members = set(np.asarray(pop.member_idx)[ci].tolist())
+        shift = pop.feature_shift * np.asarray(jax.random.normal(
+            jax.random.fold_in(pop.shift_key, int(ci)),
+            (pop.n_features,)))
+        xs = np.asarray(b["x"][s]).reshape(-1, pop.n_features) - shift
+        ys = np.asarray(b["y"][s]).reshape(-1)
+        for row, label in zip(xs, ys):
+            dists = np.abs(pool_x - row).sum(1)
+            j = int(np.argmin(dists))
+            assert dists[j] < 1e-4, "batch row is not a shifted pool row"
+            assert j in members, "batch row drawn outside the client's shard"
+            assert pool_y[j] == label
+
+
+# ---------------------------------------------------------------------------
+# engine: single compile, auto-chunk boundary
+# ---------------------------------------------------------------------------
+
+
+def _small_fl(**kw):
+    base = dict(n_clients=64, clients_per_round=8, k_max=8, rounds=6,
+                local_epochs=2, local_batch=16, local_lr=0.08,
+                fault_tolerance=True, failure_prob=0.05)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def pop64():
+    return make_population(0, n_clients=64, pool_samples=600,
+                           members_per_client=16)
+
+
+def test_population_single_compile(pop64):
+    fl = _small_fl()
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    r1 = fl_driver.run_fl_population(pop64, fl, seeds=(0, 1), rounds=6,
+                                     eval_every=3)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 == 1
+    # runtime-only change: cache hit, and the runtime value reaches the math
+    r2 = fl_driver.run_fl_population(
+        pop64, fl, params_grid=[{"failure_prob": 0.6}], seeds=(0, 1),
+        rounds=6, eval_every=3)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 == 1
+    assert r1[0][0].history["loss"] != r2[0][0].history["loss"]
+
+
+def test_population_rejects_fedl2p_and_dense_kmax(pop64):
+    with pytest.raises(ValueError, match="fedl2p"):
+        fl_driver.run_fl_population(pop64, _small_fl(), method="fedl2p")
+    with pytest.raises(ValueError, match="k_max"):
+        fl_driver.run_fl_population(pop64, _small_fl(k_max=0))
+
+
+def test_auto_chunk_boundary_bitwise(pop64):
+    """A budget just above the resident floor forces >1 selection chunks; a
+    generous budget stays at 1 chunk — and the results are bitwise equal,
+    because chunking only reshapes the selection working set."""
+    n, m, lanes = 64, 16, 2
+    resident = scale_lib.population_resident_bytes(n, m, lanes)
+    transient = scale_lib.selection_transient_bytes(n)
+    tight = resident + transient // 4          # forces ceil(transient/free) > 1
+    roomy = resident + 10 * transient
+    assert scale_lib.auto_chunks(n, roomy, m, lanes) == 1
+    assert scale_lib.auto_chunks(n, tight, m, lanes) > 1
+    with pytest.raises(ValueError, match="resident"):
+        scale_lib.auto_chunks(n, resident, m, lanes)
+
+    fl = _small_fl()
+    r1 = fl_driver.run_fl_population(pop64, fl, seeds=(0, 1), rounds=6,
+                                     eval_every=3,
+                                     memory_budget_bytes=roomy)
+    r2 = fl_driver.run_fl_population(pop64, fl, seeds=(0, 1), rounds=6,
+                                     eval_every=3,
+                                     memory_budget_bytes=tight)
+    for si in range(2):
+        assert r1[0][si].history == r2[0][si].history
+
+
+# ---------------------------------------------------------------------------
+# memory budget: §7 formulas vs real buffers
+# ---------------------------------------------------------------------------
+
+
+def test_carry_field_counts_pinned_to_real_state():
+    """The §7 accounting counts 11 UtilityState + 2 FaultState [N] f32
+    carries — pin those against the actual NamedTuples so the formulas
+    cannot silently rot when a field is added."""
+    n = 7
+    util = sel_lib.init_utility_state(n, key=jax.random.key(0))
+    fault = init_fault_state(n)
+    u_vecs = [x for x in util if x.shape == (n,) and x.dtype == jnp.float32]
+    f_vecs = [x for x in fault if x.shape == (n,) and x.dtype == jnp.float32]
+    assert len(u_vecs) == len(util) == scale_lib.UTILITY_STATE_FIELDS
+    assert len(f_vecs) == len(fault) == scale_lib.FAULT_STATE_FIELDS
+    assert scale_lib.CARRY_FIELDS == 13
+    assert scale_lib.population_carry_bytes(n) == sum(
+        x.nbytes for x in u_vecs + f_vecs)
+
+
+def test_population_data_bytes_matches_real_population():
+    pop = make_population(0, n_clients=48, pool_samples=400,
+                          members_per_client=12)
+    per_client = (pop.member_idx, pop.member_size, pop.data_size,
+                  pop.data_quality)
+    assert scale_lib.population_data_bytes(48, 12) == sum(
+        np.asarray(x).nbytes for x in per_client)
+
+
+def test_compiled_runner_memory_analysis(pop64):
+    """XLA's own measurement of the compiled population program's inputs
+    must equal the byte total of the real argument buffers — which the §7
+    formulas in turn predict for the per-client terms.  (On CPU,
+    ``temp_size_in_bytes`` is reported as 0, so the argument account is
+    the honest measurable quantity.)"""
+    fl = fl_driver.fl_for_method(_small_fl(), "proposed")
+    from repro.models.spec import meta_for
+    meta = meta_for(pop64, hidden=64)
+    runner = fl_driver._get_population_runner(fl, 6, 3, meta, 2, pop64, 1)
+    keys = jax.vmap(jax.random.key)(jnp.asarray([0, 1], jnp.uint32))
+    lanes = fl_driver._params_lanes([fl], 2)
+    mem = runner.lower(keys, pop64, lanes).compile().memory_analysis()
+
+    def nbytes(x):
+        if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+            x = jax.random.key_data(x)  # key arrays hide their uint32 words
+        return np.asarray(x).nbytes
+
+    expected = sum(nbytes(x) for x in jax.tree.leaves((keys, pop64, lanes)))
+    # XLA elides runtime scalar lanes this static config never reads, so
+    # the measured account may fall short of the handed-over buffers by at
+    # most the FLParams lane bytes — the population/pool/test arrays (all
+    # the N-scaled terms) must be measured exactly
+    lane_bytes = sum(nbytes(x) for x in jax.tree.leaves(lanes))
+    assert expected - lane_bytes <= mem.argument_size_in_bytes <= expected
+    # the §7 per-client account is part of that total
+    per_client = scale_lib.population_data_bytes(
+        pop64.n_clients, pop64.members_per_client)
+    assert per_client < expected
+    assert per_client == sum(
+        np.asarray(x).nbytes for x in
+        (pop64.member_idx, pop64.member_size, pop64.data_size,
+         pop64.data_quality))
+
+
+def test_selection_transient_formula():
+    assert scale_lib.selection_transient_bytes(1000) == 4 * 1000 * 4
+    assert scale_lib.selection_transient_bytes(1000, 4) == 4 * 250 * 4
+    # chunking shrinks ONLY the transient term, never the resident terms
+    assert (scale_lib.population_resident_bytes(1000, 32, 2)
+            == scale_lib.population_data_bytes(1000, 32)
+            + 2 * scale_lib.population_carry_bytes(1000))
+
+
+# ---------------------------------------------------------------------------
+# sharding equivalence: lane × client mesh vs single device (subprocess)
+# ---------------------------------------------------------------------------
+
+_SHARD_SCRIPT = r"""
+import dataclasses, jax, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated, make_population
+from repro.train import fl_driver
+
+SEEDS = (0, 1, 2, 3)
+
+def compare(ref_rows, sh_rows, tag):
+    for ref, sh in zip(ref_rows, sh_rows):
+        for col in ref.history:
+            a, b = ref.history[col], sh.history[col]
+            if col == "loss":
+                # the one reduction-order-sensitive scalar under GSPMD
+                np.testing.assert_allclose(a, b, atol=5e-5, err_msg=tag)
+            else:
+                assert a == b, (tag, col, a, b)
+
+# --- population engine (client_cohort plan) on lane x client meshes -------
+pop = make_population(0, n_clients=64, pool_samples=600,
+                      members_per_client=16)
+fl = FLConfig(n_clients=64, clients_per_round=8, k_max=8, rounds=6,
+              local_epochs=2, local_batch=16, fault_tolerance=True,
+              failure_prob=0.05)
+ref = fl_driver.run_fl_population(pop, fl, seeds=SEEDS, rounds=6,
+                                  eval_every=3, shard=False)[0]
+for shape in [(4, 1), (2, 2), (1, 4)]:
+    sh = fl_driver.run_fl_population(pop, fl, seeds=SEEDS, rounds=6,
+                                     eval_every=3, mesh_shape=shape)[0]
+    compare(ref, sh, f"population mesh {shape}")
+
+# scheduled-privacy carry (accountant state) must survive sharding too
+fl_dp = dataclasses.replace(fl, dp_enabled=True, dp_scheduled=True,
+                            dp_mode="clipped", adaptive_k=True)
+ref = fl_driver.run_fl_population(pop, fl_dp, seeds=SEEDS, rounds=6,
+                                  eval_every=3, shard=False)[0]
+sh = fl_driver.run_fl_population(pop, fl_dp, seeds=SEEDS, rounds=6,
+                                 eval_every=3, mesh_shape=(2, 2))[0]
+compare(ref, sh, "population scheduled (2,2)")
+assert all(r.history["eps"] == s.history["eps"] for r, s in zip(ref, sh))
+
+# --- dense sweep engine (client_parallel plan) on its 1-D lane mesh -------
+fed = make_federated(0, "unsw", n_samples=800, n_clients=8)
+fl_d = FLConfig(n_clients=8, clients_per_round=3, rounds=6, local_epochs=2,
+                local_batch=16, dp_enabled=True, dp_mode="clipped",
+                dp_epsilon=300.0, dp_clip=5.0, fault_tolerance=True)
+cells = [dataclasses.replace(fl_d, dp_epsilon=e) for e in (100.0, 300.0)]
+sharded = fl_driver.run_fl_sweep(fed, fl_d, cells, seeds=(0, 1), rounds=6,
+                                 eval_every=3)
+orig = fl_driver._lane_sharding
+fl_driver._lane_sharding = lambda n: None      # same lane count, no mesh
+try:
+    unsharded = fl_driver.run_fl_sweep(fed, fl_d, cells, seeds=(0, 1),
+                                       rounds=6, eval_every=3)
+finally:
+    fl_driver._lane_sharding = orig
+for ci in range(2):
+    compare(unsharded[ci], sharded[ci], f"dense sweep cell {ci}")
+print("SHARD_EQUIV_OK")
+"""
+
+
+def test_sharded_engines_match_single_device(tmp_path):
+    """4 XLA-faked CPU devices: both round plans — the dense
+    client_parallel sweep on its 1-D lane mesh and the population
+    client_cohort plan on (4,1)/(2,2)/(1,4) lane×client meshes — must
+    reproduce the single-device run: every state-carrying history column
+    bitwise, the loss scalar within reduction-order tolerance.  Subprocess
+    because the device count must be faked before jax initialises."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "SHARD_EQUIV_OK" in out.stdout

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Tier-1 skip audit (ISSUE 6): the skip count must never silently grow.
+
+Reads a pytest ``-rs`` log (file argument, or stdin) and enforces two
+invariants:
+
+1. **Bounded count** — at most ``MAX_SKIPS`` skipped tests.  The seed
+   baseline is 5: four dry-run-artifact guards in tests/test_artifacts.py
+   plus the optional-hypothesis module skip in
+   tests/test_core_properties.py (absent in CI, where hypothesis is
+   installed).  A new skip is a capability statement and must be a
+   deliberate decision: add its reason to ``ALLOWED`` *and* bump the
+   bound in the same review.
+2. **Named capability** — every skip reason must match one of the
+   ``ALLOWED`` patterns, each of which names the missing capability
+   (artifact set, optional dependency, device count, accelerator).  A
+   bare ``pytest.skip("...")`` with an ad-hoc reason fails the audit.
+
+Exit 0 when both hold; prints the offending lines and exits 1 otherwise.
+Usage: ``python -m pytest -rs -q | tee log && python tools/check_skips.py log``
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+MAX_SKIPS = 5
+
+# Each pattern names a missing capability a skip may legitimately declare.
+ALLOWED = (
+    r"dry-run sweep artifacts absent",      # benchmarks/artifacts not built
+    r"optional test extra 'hypothesis'",    # optional dependency
+    r"could not import 'hypothesis'",       # same, via older importorskip
+    r"requires \d+ devices",                # multi-device-only test
+    r"requires TPU",                        # accelerator-only test
+)
+
+_SKIP_RE = re.compile(r"^SKIPPED \[(\d+)\] (\S+): (.*)$")
+
+
+def audit(lines) -> int:
+    total = 0
+    errors = []
+    for line in lines:
+        m = _SKIP_RE.match(line.strip())
+        if not m:
+            continue
+        count, where, reason = int(m.group(1)), m.group(2), m.group(3)
+        total += count
+        if not any(re.search(p, reason) for p in ALLOWED):
+            errors.append(
+                f"  {where}: unrecognised skip reason {reason!r} — name "
+                "the missing capability and allow-list it in "
+                "tools/check_skips.py")
+    if total > MAX_SKIPS:
+        errors.append(
+            f"  skip count grew: {total} > baseline {MAX_SKIPS} — skips "
+            "may only decrease (ISSUE 6); if a new skip is deliberate, "
+            "bump MAX_SKIPS in tools/check_skips.py in the same change")
+    if errors:
+        print(f"skip audit FAILED ({total} skips):")
+        print("\n".join(errors))
+        return 1
+    print(f"skip audit OK: {total} skip(s) <= {MAX_SKIPS}, all reasons "
+          "name their missing capability")
+    return 0
+
+
+def main() -> int:
+    if len(sys.argv) > 1:
+        with open(sys.argv[1]) as f:
+            return audit(f)
+    return audit(sys.stdin)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
