@@ -1,0 +1,211 @@
+"""Streaming-serving benchmark (ISSUE 7): the tentpole perf claim.
+
+Trains each grid detector with the compiled FL engine, persists it through
+``save_serving_checkpoint``, rebuilds a :class:`~repro.serve.ServeEngine`
+from the checkpoint alone, and measures the serving hot path on a replayed
+test-window stream.  Written to ``BENCH_serve.json`` at the repo root:
+
+* per (model, bucket): **windows/sec** and **p50/p99 per-window latency**
+  (a window's latency is its batch's wall), warm min-of-N;
+* per model: the naive baseline — one synchronous batch-1 ``predict_proba``
+  dispatch per window, the pre-engine serving idiom;
+* the **gate** (full mode): batched + double-buffered serving at the
+  largest bucket must be ≥5× the naive per-window loop on every grid
+  model.
+
+Hard assertions (both modes):
+
+* exactly ONE scorer compile per (model, bucket) — ``SERVE_STATS`` misses
+  move only during warmup, never during a timed run;
+* served scores across the whole stream are bitwise equal to the compiled
+  same-route ``predict_proba`` reference on the same windows.
+
+Timing protocol (repo memory: very noisy wall clocks): warm min-of-N via
+``benchmarks/common.warm_min`` — compile and checkpoint I/O happen before
+any timed call; training/compile seconds are recorded separately,
+unaudited.
+
+``REPRO_SERVE_SMOKE=1`` shrinks the stream and skips the 5x gate
+(bitwise + compile-count assertions stay on).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.models.spec import get_model_spec, meta_for
+from repro.serve import engine as serve_engine
+from repro.serve.engine import ServeEngine, save_serving_checkpoint
+from repro.train import fl_driver
+
+from benchmarks import common
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+SMOKE = os.environ.get("REPRO_SERVE_SMOKE", "0") == "1"
+BUCKETS = (16, 128)
+GRID = (("unsw", "mlp"), ("road_raw", "cnn"))
+ROUNDS = 4 if SMOKE else 20
+N_CLIENTS = 6 if SMOKE else 10
+N_SAMPLES = 1_000 if SMOKE else 2_400
+STREAM_WINDOWS = 512 if SMOKE else 8_192   # windows per timed stream pass
+CHUNK = 37                                 # awkward arrival-burst size
+NAIVE_WINDOWS = 64 if SMOKE else 384       # the naive loop is the slow part
+WARM_N = 1 if SMOKE else 3
+GATE_X = 5.0
+
+
+def _train_engine(tmp: str, dataset: str, model: str) -> tuple:
+    fed = make_federated(0, dataset, n_samples=N_SAMPLES,
+                         n_clients=N_CLIENTS)
+    fl = FLConfig(n_clients=N_CLIENTS, clients_per_round=4, rounds=ROUNDS,
+                  local_epochs=2, local_batch=32, local_lr=0.08,
+                  dp_enabled=False, fault_tolerance=False, model=model)
+    t0 = time.time()
+    res = fl_driver.run_fl(fed, fl, "random", seed=0, rounds=ROUNDS,
+                           eval_every=max(ROUNDS // 2, 1), dataset=dataset,
+                           return_params=True)
+    train_s = time.time() - t0
+    path = save_serving_checkpoint(os.path.join(tmp, f"{model}_{dataset}"),
+                                   res.params, model, meta_for(fed))
+    return fed, path, train_s, float(res.auc)
+
+
+def _stream(windows: np.ndarray, total: int):
+    """Replay ``windows`` in CHUNK-sized bursts until ~``total`` served."""
+    n = 0
+    while n < total:
+        for i in range(0, windows.shape[0], CHUNK):
+            c = windows[i:i + CHUNK]
+            yield c
+            n += c.shape[0]
+            if n >= total:
+                return
+
+
+def run(csv_rows: list) -> dict:
+    mode = "smoke" if SMOKE else "full"
+    print(f"\n== Serve: streaming anomaly scoring ({mode}) ==")
+    serve_engine._SCORER_CACHE.clear()
+    tmp = tempfile.mkdtemp(prefix="bench_serve_")
+    cells, naives = [], []
+    gate_ok = True
+
+    for dataset, model in GRID:
+        fed, ckpt, train_s, auc = _train_engine(tmp, dataset, model)
+        windows = np.asarray(fed.test_x, np.float32)
+        spec = get_model_spec(model, meta_for(fed))
+
+        # ---- bucketed, double-buffered engine: one cell per bucket ------
+        per_bucket_wps = {}
+        for bucket in BUCKETS:
+            eng = ServeEngine.from_checkpoint(ckpt, buckets=(bucket,))
+            m0 = serve_engine.SERVE_STATS["misses"]
+            eng.warmup()
+            compiles = serve_engine.SERVE_STATS["misses"] - m0
+            # bucket may be cached from an earlier engine: 0 or 1 misses,
+            # never more
+            assert compiles <= 1, (model, bucket, compiles)
+
+            reports = []
+
+            def timed(eng=eng, reports=reports):
+                reports.append(
+                    eng.score_stream(_stream(windows, STREAM_WINDOWS)))
+
+            m1 = serve_engine.SERVE_STATS["misses"]
+            timed()                                   # warm the whole path
+            wall_s, walls = common.warm_min(timed, WARM_N)
+            assert serve_engine.SERVE_STATS["misses"] == m1, (
+                f"({model}, {bucket}): timed serving must never compile")
+
+            best = min(reports[1:], key=lambda r: r.wall_s)
+            # bitwise acceptance on the served stream (first replay pass)
+            ref = np.asarray(jax.jit(
+                lambda p, z: spec.predict_proba_routed(p, z, eng.route)
+            )(eng.params, jnp.asarray(windows))[:, 1])
+            got = best.scores[:windows.shape[0]]
+            assert np.array_equal(got, ref[:got.shape[0]]), (
+                f"({model}, {bucket}): served scores are not bitwise equal "
+                "to the compiled predict_proba reference")
+
+            cell = {
+                "dataset": dataset, "model": model, "bucket": bucket,
+                "route": eng.route,
+                "windows_per_sec": best.windows_per_sec,
+                "p50_ms": best.p50_s * 1e3,
+                "p99_ms": best.p99_s * 1e3,
+                "n_windows": best.n_windows,
+                "n_batches": best.n_batches,
+                "scorer_compiles": compiles,
+                "train_s_unaudited": train_s,
+                "auc": auc,
+            }
+            cells.append(cell)
+            per_bucket_wps[bucket] = best.windows_per_sec
+            print(f"  {dataset:9s} {model:4s} bucket={bucket:4d}: "
+                  f"{best.windows_per_sec:10,.0f} win/s "
+                  f"p50={cell['p50_ms']:.3f}ms p99={cell['p99_ms']:.3f}ms "
+                  f"({compiles} compile)")
+            csv_rows.append((f"serve/{dataset}/{model}/b{bucket}",
+                             1e6 / best.windows_per_sec,
+                             best.windows_per_sec))
+
+        # ---- naive baseline: one blocking batch-1 dispatch per window ---
+        eng = ServeEngine.from_checkpoint(ckpt, buckets=(BUCKETS[-1],))
+        nx = windows[:NAIVE_WINDOWS]
+        eng.score_naive(nx)                           # warm the b=1 program
+
+        def naive(eng=eng, nx=nx):
+            naive.last = eng.score_naive(nx)
+
+        naive_wall, _ = common.warm_min(naive, max(WARM_N, 2))
+        naive_wps = nx.shape[0] / naive_wall
+        speedup = per_bucket_wps[BUCKETS[-1]] / naive_wps
+        ok = speedup >= GATE_X
+        gate_ok = gate_ok and ok
+        naives.append({
+            "dataset": dataset, "model": model,
+            "naive_windows_per_sec": naive_wps,
+            "naive_p50_ms": naive.last.p50_s * 1e3,
+            "engine_windows_per_sec": per_bucket_wps[BUCKETS[-1]],
+            "speedup_vs_naive": speedup,
+            "gate_5x": ok,
+        })
+        print(f"  {dataset:9s} {model:4s} naive: {naive_wps:10,.0f} win/s "
+              f"-> engine speedup {speedup:,.1f}x "
+              f"{'OK' if ok else 'FAIL'}")
+
+    report = {
+        "mode": mode,
+        "config": {"buckets": list(BUCKETS), "rounds": ROUNDS,
+                   "stream_windows": STREAM_WINDOWS, "chunk": CHUNK,
+                   "naive_windows": NAIVE_WINDOWS, "warm_n": WARM_N,
+                   "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "grid": cells,
+        "naive_baseline": naives,
+        "gate": {"required_speedup": GATE_X,
+                 "all_models_pass": bool(gate_ok),
+                 "gated": not SMOKE},
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"  -> {os.path.abspath(OUT)}")
+    return report
+
+
+if __name__ == "__main__":
+    report = run([])
+    if report["gate"]["gated"] and not report["gate"]["all_models_pass"]:
+        raise SystemExit(
+            "serve gate failed: batched double-buffered serving did not "
+            f"reach {GATE_X}x the naive per-window loop on every model")

@@ -25,11 +25,28 @@ import argparse
 import glob
 import json
 import os
-from typing import Dict, List
+from typing import Dict, List, NamedTuple, Optional
 
-PEAK_FLOPS = 197e12   # TPU v5e bf16 FLOP/s per chip
-HBM_BW = 819e9        # bytes/s per chip
-LINK_BW = 50e9        # bytes/s per ICI link (~)
+
+class Peaks(NamedTuple):
+    """Per-chip peak capabilities the three roofline terms divide by."""
+
+    flops: float      # dense bf16/fp32-accum FLOP/s
+    hbm_bw: float     # bytes/s main-memory bandwidth
+    link_bw: float    # bytes/s per inter-chip link (ICI / NVLink / socket)
+
+
+# Datasheet-order numbers per backend; roofline terms are ratios, so ~10%
+# spec-sheet slop never flips the dominant term.  Select with --backend,
+# or override any single peak with --peak-flops/--peak-hbm-bw/--peak-link-bw.
+BACKEND_PEAKS: Dict[str, Peaks] = {
+    "tpu_v5e": Peaks(flops=197e12, hbm_bw=819e9, link_bw=50e9),
+    "tpu_v4": Peaks(flops=275e12, hbm_bw=1228e9, link_bw=100e9),
+    "gpu_a100": Peaks(flops=312e12, hbm_bw=2039e9, link_bw=300e9),
+    # a big server CPU: ~32 AVX-512 cores, 8-channel DDR, one UPI link
+    "cpu": Peaks(flops=2e12, hbm_bw=200e9, link_bw=20e9),
+}
+DEFAULT_BACKEND = "tpu_v5e"   # the assigned accelerator (mesh.py matches)
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -81,16 +98,17 @@ def scan_product(a: dict) -> float:
     return float(c["product"])
 
 
-def analyse(a: dict) -> dict:
+def analyse(a: dict, peaks: Optional[Peaks] = None) -> dict:
+    peaks = peaks or BACKEND_PEAKS[DEFAULT_BACKEND]
     corr = scan_product(a)
     flops_dev = a["cost"]["flops"] * corr
     bytes_dev = a["cost"]["bytes_accessed"] * corr
     coll_dev = a["collectives"]["total"] * corr
     n_dev = a["devices"]
 
-    t_compute = flops_dev / PEAK_FLOPS
-    t_memory = bytes_dev / HBM_BW
-    t_coll = coll_dev / LINK_BW
+    t_compute = flops_dev / peaks.flops
+    t_memory = bytes_dev / peaks.hbm_bw
+    t_coll = coll_dev / peaks.link_bw
     terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
     dominant = max(terms, key=terms.get)
 
@@ -104,7 +122,7 @@ def analyse(a: dict) -> dict:
     # roofline fraction: useful model FLOPs per second achievable given the
     # dominant bottleneck (how far from pure-compute roofline this step sits)
     t_bound = max(terms.values())
-    mfu_bound = (model_flops / n_dev / t_bound) / PEAK_FLOPS if t_bound else 0.0
+    mfu_bound = (model_flops / n_dev / t_bound) / peaks.flops if t_bound else 0.0
 
     return {
         "arch": a["arch"], "shape": a["shape"], "mesh": a["mesh"],
@@ -149,14 +167,35 @@ def to_markdown(rows: List[dict]) -> str:
     return hdr + body
 
 
+def resolve_peaks(backend: str, peak_flops: Optional[float] = None,
+                  peak_hbm_bw: Optional[float] = None,
+                  peak_link_bw: Optional[float] = None) -> Peaks:
+    """Backend-table peaks with per-term overrides (the --peak-* flags)."""
+    base = BACKEND_PEAKS[backend]
+    return Peaks(flops=peak_flops or base.flops,
+                 hbm_bw=peak_hbm_bw or base.hbm_bw,
+                 link_bw=peak_link_bw or base.link_bw)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pattern", default="*")
     ap.add_argument("--csv", default=None)
     ap.add_argument("--md", action="store_true")
+    ap.add_argument("--backend", choices=sorted(BACKEND_PEAKS),
+                    default=DEFAULT_BACKEND,
+                    help="peak table the roofline terms divide by")
+    ap.add_argument("--peak-flops", type=float, default=None,
+                    help="override peak FLOP/s per chip")
+    ap.add_argument("--peak-hbm-bw", type=float, default=None,
+                    help="override memory bandwidth (bytes/s per chip)")
+    ap.add_argument("--peak-link-bw", type=float, default=None,
+                    help="override inter-chip link bandwidth (bytes/s)")
     args = ap.parse_args()
 
-    rows = [analyse(a) for a in load_artifacts(args.pattern)]
+    peaks = resolve_peaks(args.backend, args.peak_flops, args.peak_hbm_bw,
+                          args.peak_link_bw)
+    rows = [analyse(a, peaks) for a in load_artifacts(args.pattern)]
     if not rows:
         print("no artifacts found — run `python -m repro.launch.dryrun --all` first")
         return

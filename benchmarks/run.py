@@ -13,6 +13,8 @@ the human-readable tables stream as each section runs.
            one program) + FT robustness gate (writes BENCH_fault.json)
   models — pluggable-detector grid: flattened MLP vs window-native CNN /
            RG-LRU on raw ROAD windows (writes BENCH_models.json)
+  serve  — streaming anomaly scoring: bucketed double-buffered engine vs
+           naive per-window loop (writes BENCH_serve.json)
   table1 — method comparison (paper Table I)
   table2 — fault tolerance ablation (paper Table II)
   fig3   — privacy budget sweep (paper Fig. 3)
@@ -80,14 +82,16 @@ def main() -> None:
     t0 = time.time()
 
     from benchmarks import (bench_engine, bench_fault, bench_models,
-                            bench_privacy, bench_sweep, bench_table1,
-                            bench_table2, bench_table3, bench_fig3)
+                            bench_privacy, bench_serve, bench_sweep,
+                            bench_table1, bench_table2, bench_table3,
+                            bench_fig3)
 
     bench_engine.run(csv_rows)
     bench_sweep.run(csv_rows)
     bench_privacy.run(csv_rows)
     bench_fault.run(csv_rows)
     bench_models.run(csv_rows)
+    bench_serve.run(csv_rows)
     bench_table1.run(csv_rows)
     bench_table2.run(csv_rows)
     bench_fig3.run(csv_rows)

@@ -56,6 +56,18 @@ def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> str:
     return final
 
 
+def load_manifest(path: str) -> dict:
+    """The sidecar manifest ``save_pytree`` wrote next to the ``.npz`` —
+    keys, byte count and the caller's ``metadata`` dict.  The serving
+    engine (``repro/serve``) stores the model name and dataset metadata
+    there so a checkpoint is self-describing: ``ServeEngine.from_checkpoint``
+    rebuilds the ModelSpec and the restore template from the manifest alone.
+    """
+    final = path if path.endswith(".npz") else path + ".npz"
+    with open(final + ".json") as f:
+        return json.load(f)
+
+
 def load_flat(path: str) -> Dict[str, np.ndarray]:
     final = path if path.endswith(".npz") else path + ".npz"
     with np.load(final) as z:

@@ -69,12 +69,24 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
 
 
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: [B,S,HQ,D]; k,v: [B,T,HKV,D] -> [B,S,HQ,D].
+
+    ``interpret=None`` auto-routes by backend exactly like
+    :func:`repro.kernels.flash_decode.resolve_interpret`: compiled Pallas on
+    TPU, interpret mode elsewhere."""
+    from repro.kernels.flash_decode import resolve_interpret
+    return _flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                            bk=bk, interpret=resolve_interpret(interpret))
+
+
 @functools.partial(
     jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
 )
-def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-                    bq: int = 128, bk: int = 128, interpret: bool = True):
-    """q: [B,S,HQ,D]; k,v: [B,T,HKV,D] -> [B,S,HQ,D]."""
+def _flash_attention(q, k, v, *, causal: bool, window: Optional[int],
+                     bq: int, bk: int, interpret: bool):
     b, s, hq, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
     g = hq // hkv

@@ -65,12 +65,32 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[0] = l_scr[...]
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "interpret", "return_partials"))
-def flash_decode(q, k, v, length, *, bk: int = 256, interpret: bool = True,
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Backend-routed interpret mode (the dp_clip_noise routing idiom):
+    ``None`` resolves to compiled Pallas on TPU and interpret mode on every
+    other backend, so the kernel is never silently interpreted on real
+    hardware and never fails to lower off-TPU.  An explicit bool wins
+    (tests force ``interpret=True`` to validate the kernel on CPU)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def flash_decode(q, k, v, length, *, bk: int = 256,
+                 interpret: Optional[bool] = None,
                  return_partials: bool = False):
     """q: [B,HQ,D]; k,v: [B,T,HKV,D]; length: [B] valid cache prefix.
 
-    Returns [B,HQ,D] (or (o, m, l) partials when return_partials)."""
+    Returns [B,HQ,D] (or (o, m, l) partials when return_partials).
+    ``interpret=None`` auto-routes by backend (:func:`resolve_interpret`)."""
+    return _flash_decode(q, k, v, length, bk=bk,
+                         interpret=resolve_interpret(interpret),
+                         return_partials=return_partials)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "interpret", "return_partials"))
+def _flash_decode(q, k, v, length, *, bk: int, interpret: bool,
+                  return_partials: bool):
     b, hq, d = q.shape
     t, hkv = k.shape[1], k.shape[2]
     group = hq // hkv

@@ -25,14 +25,26 @@ def pallas_backend_ready() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def default_route() -> str:
+    """Score-path kernel route for the serving engine (repro/serve): the
+    Pallas kernels (``"kernel"``) when the backend can compile them, the
+    pure-jnp ``kernels.ref`` fallback (``"ref"``) elsewhere — the same
+    by-backend dispatch the DP clip+noise aggregation path uses."""
+    return "kernel" if pallas_backend_ready() else "ref"
+
+
 def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
+    """``interpret=None`` (default) auto-routes by backend: compiled Pallas
+    on TPU, interpret mode elsewhere (``flash_decode.resolve_interpret``)."""
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                interpret=interpret)
 
 
-def flash_decode(q, k, v, length, *, interpret: bool = True,
+def flash_decode(q, k, v, length, *, interpret: Optional[bool] = None,
                  return_partials: bool = False):
+    """``interpret=None`` (default) auto-routes by backend — the kernel is
+    never silently interpreted on real hardware."""
     return _fd.flash_decode(q, k, v, length, interpret=interpret,
                             return_partials=return_partials)
 

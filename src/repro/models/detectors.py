@@ -17,6 +17,18 @@ for the generic data path; the specs unflatten via ``DataMeta
   projection, gated linear recurrence via ``associative_scan``, gelu gate,
   output projection), mean+last pooled.  Exercises the repo's
   recurrent/SSM machinery on the anomaly workload.
+* ``attn`` — a causal self-attention detector (ISSUE 7) whose score path
+  is ROUTED: one causal attention block over the window plus a
+  learned-query read-out that is exactly a one-token decode against the
+  window's KV.  The ``"kernel"`` route runs
+  ``kernels/flash_attention.py`` + ``kernels/flash_decode.py`` (compiled
+  Pallas on TPU, interpret elsewhere); the ``"ref"`` route runs the
+  pure-jnp ``kernels/ref.py`` oracles.  ``ModelSpec.route_variants``
+  carries both; the build-time default (``ModelSpec.logits``) follows
+  ``kernels.ops.default_route`` — ref on CPU, kernel on TPU — while
+  ``loss`` always differentiates the ref math (the forward-only Pallas
+  kernels have no VJP).  This is the serving engine's sequence hot path
+  (``repro/serve``, ARCHITECTURE.md §Serving).
 
 Both are plain f32 param pytrees (``layers.fan_in_init``), so DP
 clip+noise, aggregation and the scan carry treat them exactly like the
@@ -30,6 +42,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.models.layers import fan_in_init
 from repro.models import rglru as rglru_lib
 from repro.models import spec as spec_lib
@@ -143,5 +157,91 @@ def _build_rglru(meta: spec_lib.DataMeta) -> spec_lib.ModelSpec:
                               logits=logits)
 
 
+# ---------------------------------------------------------------------------
+# Routed causal-attention detector (the serving engine's sequence hot path)
+# ---------------------------------------------------------------------------
+
+_ATTN_HEADS = 2
+
+
+def _attn_primitives(route: str):
+    """(attention, decode) primitives for one score route.
+
+    ``kernel``: the Pallas kernels with backend-resolved interpret mode
+    (``flash_decode.resolve_interpret`` — compiled on TPU, interpret
+    elsewhere).  ``ref``: the pure-jnp oracles, which are also the
+    differentiable math ``loss`` uses.  Window lengths ≤ 128 always satisfy
+    the kernels' block-divisibility (bq/bk clamp to the sequence length).
+    """
+    if route == "kernel":
+        return (lambda q, k, v: kops.flash_attention(q, k, v, causal=True),
+                lambda q, k, v, ln: kops.flash_decode(q, k, v, ln))
+    if route == "ref":
+        return (lambda q, k, v: kref.flash_attention_ref(q, k, v, causal=True),
+                kref.flash_decode_ref)
+    raise KeyError(route)
+
+
+def _build_attn(meta: spec_lib.DataMeta) -> spec_lib.ModelSpec:
+    _require_windowed(meta, "attn")
+    window, n_signals = meta.feature_shape[0], meta.feature_shape[-1]
+    h = _ATTN_HEADS
+    d = max(16, (meta.hidden // 4 // (2 * h)) * 2 * h)
+    dh = d // h
+
+    def init(key):
+        ks = jax.random.split(key, 9)
+        lin = lambda k, a, b: fan_in_init(k, (a, b), jnp.float32)
+        return {
+            "embed": {"w": lin(ks[0], n_signals, d),
+                      "b": jnp.zeros((d,), jnp.float32)},
+            "pos": 0.02 * jax.random.normal(ks[1], (window, d), jnp.float32),
+            "wq": lin(ks[2], d, d), "wk": lin(ks[3], d, d),
+            "wv": lin(ks[4], d, d), "wo": lin(ks[5], d, d),
+            # read-out: a learned query decoding against the window's KV
+            "rq": 0.5 * jax.random.normal(ks[6], (h, dh), jnp.float32),
+            "rkv": {"wk": lin(ks[7], d, d), "wv": lin(ks[8], d, d)},
+            "head": {"w": fan_in_init(jax.random.fold_in(key, 9),
+                                      (2 * d, meta.n_classes), jnp.float32),
+                     "b": jnp.zeros((meta.n_classes,), jnp.float32)},
+        }
+
+    def make_logits(route: str):
+        attention, decode = _attn_primitives(route)
+
+        def logits(params, x):
+            hseq = _unflatten(x, meta)                 # [b, T, signals]
+            b = hseq.shape[0]
+            hseq = hseq @ params["embed"]["w"] + params["embed"]["b"]
+            hseq = hseq + params["pos"]                # [b, T, d]
+            q = (hseq @ params["wq"]).reshape(b, window, h, dh)
+            k = (hseq @ params["wk"]).reshape(b, window, h, dh)
+            v = (hseq @ params["wv"]).reshape(b, window, h, dh)
+            o = attention(q, k, v).reshape(b, window, d)
+            hseq = hseq + o @ params["wo"]             # residual
+            k2 = (hseq @ params["rkv"]["wk"]).reshape(b, window, h, dh)
+            v2 = (hseq @ params["rkv"]["wv"]).reshape(b, window, h, dh)
+            qr = jnp.broadcast_to(params["rq"], (b, h, dh))
+            ro = decode(qr, k2, v2,
+                        jnp.full((b,), window, jnp.int32)).reshape(b, d)
+            pooled = jnp.concatenate([ro, hseq.mean(axis=1)], axis=-1)
+            return pooled @ params["head"]["w"] + params["head"]["b"]
+
+        return logits
+
+    variants = {"kernel": make_logits("kernel"), "ref": make_logits("ref")}
+    ref_logits = variants["ref"]
+
+    def loss(params, batch):
+        # always the differentiable ref math (Pallas forwards have no VJP)
+        return spec_lib.cross_entropy(ref_logits(params, batch["x"]),
+                                      batch["y"])
+
+    return spec_lib.ModelSpec(name="attn", init=init, loss=loss,
+                              logits=variants[kops.default_route()],
+                              route_variants=variants)
+
+
 spec_lib.register_model("cnn", _build_cnn)
 spec_lib.register_model("rglru", _build_rglru)
+spec_lib.register_model("attn", _build_attn)

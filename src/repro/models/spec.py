@@ -31,7 +31,7 @@ window-native ROAD detectors in ``models/detectors.py`` (``cnn``,
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, NamedTuple, Tuple
+from typing import Callable, Dict, Mapping, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,15 +80,43 @@ class ModelSpec:
       derive from.  Deriving ``accuracy`` from argmax-of-logits (not
       argmax-of-softmax) keeps the ``mlp`` spec bitwise identical to the
       pre-spec engine.
+    * ``route_variants`` — optional per-route logits functions for specs
+      whose score path has a Pallas-kernel route next to the pure-jnp
+      ``kernels/ref`` one (the sequence detector in ``models/detectors.py``:
+      ``"kernel"`` → flash_attention/flash_decode, ``"ref"`` → the ref
+      oracles).  ``logits`` stays the build-time default route, so every
+      existing call site is untouched; the serving engine (``repro/serve``)
+      and tests select a route explicitly via :meth:`logits_routed` /
+      :meth:`predict_proba_routed`.
     """
 
     name: str
     init: Callable
     loss: Callable
     logits: Callable
+    route_variants: Optional[Mapping[str, Callable]] = None
+
+    def logits_routed(self, route: Optional[str] = None) -> Callable:
+        """Logits function on an explicit kernel route.  ``None`` resolves
+        by backend (``kernels.ops.default_route``: Pallas kernels on TPU,
+        ``kernels/ref`` elsewhere); specs without route variants ignore the
+        route — their single implementation IS both routes."""
+        if self.route_variants is None:
+            return self.logits
+        from repro.kernels.ops import default_route
+        route = route or default_route()
+        try:
+            return self.route_variants[route]
+        except KeyError:
+            raise KeyError(
+                f"model {self.name!r} has no score route {route!r}; "
+                f"available: {tuple(self.route_variants)}") from None
 
     def predict_proba(self, params, x):
         return jax.nn.softmax(self.logits(params, x), axis=-1)
+
+    def predict_proba_routed(self, params, x, route: Optional[str] = None):
+        return jax.nn.softmax(self.logits_routed(route)(params, x), axis=-1)
 
     def accuracy(self, params, x, y) -> jnp.ndarray:
         pred = jnp.argmax(self.logits(params, x), axis=-1)

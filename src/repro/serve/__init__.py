@@ -1,0 +1,28 @@
+"""Streaming anomaly-scoring engine: serve federated detectors at traffic
+rate (ISSUE 7, ARCHITECTURE.md §Serving).
+
+Layout::
+
+    batching.py   static batch buckets: plan/pad/accumulate
+    feed.py       double-buffered host→device upload prefetch
+    engine.py     compiled ServeEngine + self-describing checkpoints
+    cli.py        python -m repro.serve — train-if-missing, then serve
+
+Quick start::
+
+    from repro.serve import ServeEngine, save_serving_checkpoint
+    save_serving_checkpoint("ckpt/serve_mlp", params, "mlp", meta)
+    eng = ServeEngine.from_checkpoint("ckpt/serve_mlp")
+    scores = eng.score(windows)              # [n] anomaly probabilities
+"""
+from repro.serve.batching import (DEFAULT_BUCKETS, Bucketer, batches_of,
+                                  bucket_for, pad_to, plan_chunks)
+from repro.serve.engine import (SERVE_STATS, ServeEngine, StreamReport,
+                                save_serving_checkpoint)
+from repro.serve.feed import device_feed
+
+__all__ = [
+    "DEFAULT_BUCKETS", "Bucketer", "batches_of", "bucket_for", "pad_to",
+    "plan_chunks", "SERVE_STATS", "ServeEngine", "StreamReport",
+    "save_serving_checkpoint", "device_feed",
+]

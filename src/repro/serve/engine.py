@@ -1,0 +1,286 @@
+"""Compiled streaming anomaly-scoring engine (ISSUE 7, ARCHITECTURE.md
+§Serving).
+
+Training exists to put a detector in front of live traffic; this is the
+deployment half: load a federated checkpoint, resolve the registered
+:class:`~repro.models.spec.ModelSpec`, and score a continuous stream of
+CAN/NetFlow windows at traffic rate.  Three pieces of perf machinery:
+
+* **padded bucket batching** (``serve/batching.py``) — incoming windows are
+  bucketed into a small set of static batch shapes, so each (model, bucket)
+  pair compiles exactly once.  ``_get_scorer`` mirrors the training
+  engine's ``_get_runner``: a module-level cache keyed on (model name,
+  DataMeta, bucket, route) with ``SERVE_STATS`` miss/hit counters that the
+  bench asserts on.
+* **double-buffered host→device feed** (``serve/feed.py``) — batch N+1's
+  ``device_put`` is issued before batch N is dispatched, and the engine
+  blocks on batch N−1 only after dispatching N, so upload, dispatch and
+  compute overlap at pipeline depth one.  Off-CPU the scorer donates its
+  input buffer (it is rebuilt per batch anyway).
+* **kernel routing** — sequence detectors carry per-route logits
+  (``ModelSpec.route_variants``): the ``"kernel"`` route runs the Pallas
+  flash_attention/flash_decode kernels (compiled on TPU), ``"ref"`` the
+  pure-jnp ``kernels/ref`` oracles; ``route=None`` resolves by backend
+  exactly like the DP clip+noise aggregation path.  On every route the
+  served scores are bitwise equal to the same-route
+  ``ModelSpec.predict_proba`` on the same windows (padding rows masked) —
+  tests/test_serve.py pins it.
+
+Per-client personalization: an optional stacked pytree of FedL2P-style
+personalized parameters (``train/fl_driver.export_personalized``) rides the
+same checkpoint; ``client=i`` scores with client i's fine-tuned detector at
+zero recompile cost (parameters are runtime arguments of the cached
+scorer).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.kernels.ops import default_route
+from repro.models.spec import DataMeta, ModelSpec, get_model_spec
+from repro.serve import batching, feed
+
+# Compiled per-(model, DataMeta, bucket, route) scorers.  Keyed on the spec
+# NAME (registry builders are deterministic in the DataMeta), so two engines
+# serving the same architecture share one program — the single-compile
+# property benchmarks/bench_serve.py asserts via SERVE_STATS.
+_SCORER_CACHE: Dict = {}
+SERVE_STATS = {"misses": 0, "hits": 0}
+
+
+def _get_scorer(spec: ModelSpec, meta: DataMeta, bucket: int,
+                route: str) -> Callable:
+    """Compiled ``scorer(params, x[bucket, d]) -> scores[bucket]`` (the
+    class-1 anomaly probability).  The input buffer is donated off-CPU —
+    the feed rebuilds it per batch, so XLA may alias it into the
+    activations instead of holding both live."""
+    cache_key = (spec.name, meta, int(bucket), route)
+    scorer = _SCORER_CACHE.get(cache_key)
+    if scorer is None:
+        SERVE_STATS["misses"] += 1
+        logits_fn = spec.logits_routed(route)
+
+        def score(params, x):
+            return jax.nn.softmax(logits_fn(params, x), axis=-1)[:, 1]
+
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        scorer = jax.jit(score, donate_argnums=donate)
+        _SCORER_CACHE[cache_key] = scorer
+    else:
+        SERVE_STATS["hits"] += 1
+    return scorer
+
+
+@dataclass
+class StreamReport:
+    """Scores plus the first-class serving metrics (windows/sec, p50/p99
+    per-window latency).  A window's latency is its batch's wall — every
+    window in a batch completes when the batch does."""
+
+    scores: np.ndarray
+    n_windows: int
+    n_batches: int
+    wall_s: float
+    batch_walls_s: List[float] = field(default_factory=list)
+    batch_sizes: List[int] = field(default_factory=list)
+
+    @property
+    def windows_per_sec(self) -> float:
+        return self.n_windows / self.wall_s if self.wall_s else float("inf")
+
+    def latency_percentile(self, q: float) -> float:
+        """Per-window latency percentile: batch walls weighted by the
+        number of valid windows each batch carried."""
+        per_window = np.repeat(np.asarray(self.batch_walls_s),
+                               np.asarray(self.batch_sizes))
+        return float(np.percentile(per_window, q))
+
+    @property
+    def p50_s(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def p99_s(self) -> float:
+        return self.latency_percentile(99.0)
+
+
+class ServeEngine:
+    """Streaming scorer for one trained detector (+ optional personalized
+    per-client parameters).
+
+    ``spec``/``meta``/``params`` usually come from
+    :meth:`from_checkpoint`; ``buckets`` are the static batch shapes
+    (``serve/batching.py``); ``route`` picks the score-path kernels for
+    sequence detectors (``None`` = by backend, like DP clip+noise).
+    """
+
+    def __init__(self, spec: ModelSpec, meta: DataMeta, params,
+                 *, buckets: Sequence[int] = batching.DEFAULT_BUCKETS,
+                 route: Optional[str] = None, heads=None):
+        self.spec = spec
+        self.meta = meta
+        self.params = params
+        self.buckets = batching.normalize_buckets(buckets)
+        self.route = route or default_route()
+        self.heads = heads
+        # resolve eagerly so an invalid route fails at construction
+        spec.logits_routed(self.route)
+
+    # -- parameters -------------------------------------------------------
+
+    def params_for(self, client: Optional[int]):
+        """Global params, or client ``i``'s personalized tree (a leading-axis
+        slice of the stacked heads — no recompile: same leaf shapes)."""
+        if client is None:
+            return self.params
+        if self.heads is None:
+            raise ValueError(
+                "engine has no personalized heads; export them with "
+                "train/fl_driver.export_personalized and pass heads=... "
+                "(or save_serving_checkpoint(..., heads=...))")
+        return jax.tree.map(lambda h: h[int(client)], self.heads)
+
+    @property
+    def n_personalized(self) -> int:
+        if self.heads is None:
+            return 0
+        return int(jax.tree.leaves(self.heads)[0].shape[0])
+
+    # -- scoring ----------------------------------------------------------
+
+    def warmup(self):
+        """Compile every (model, bucket) program outside the serving path."""
+        d = int(np.prod(self.meta.feature_shape))
+        for b in self.buckets:
+            scorer = _get_scorer(self.spec, self.meta, b, self.route)
+            jax.block_until_ready(
+                scorer(self.params, jnp.zeros((b, d), jnp.float32)))
+
+    def score(self, windows: np.ndarray,
+              client: Optional[int] = None) -> np.ndarray:
+        """Score an [n, d] array of flat windows in bucket-shaped batches;
+        returns [n] anomaly scores in input order (padding rows dropped)."""
+        report = self.score_stream([np.asarray(windows)], client=client)
+        return report.scores
+
+    def score_stream(self, stream: Iterable[np.ndarray],
+                     client: Optional[int] = None,
+                     sharding=None) -> StreamReport:
+        """Drain a stream of [m, d] window chunks through the pipelined
+        scorer (bucket batching → double-buffered feed → dispatch-ahead
+        scoring) and collect scores + timing."""
+        params = self.params_for(client)
+        batches = batching.batches_of(stream, self.buckets)
+        t0 = time.perf_counter()
+        t_prev = t0
+        pending: Optional[Tuple[jax.Array, int]] = None
+        scores: List[np.ndarray] = []
+        walls: List[float] = []
+        sizes: List[int] = []
+
+        def _drain(entry, t_prev):
+            res, n_valid = entry
+            res.block_until_ready()
+            t_now = time.perf_counter()
+            scores.append(np.asarray(res)[:n_valid])
+            walls.append(t_now - t_prev)
+            sizes.append(n_valid)
+            return t_now
+
+        for xb, n_valid in feed.device_feed(batches, sharding):
+            scorer = _get_scorer(self.spec, self.meta, xb.shape[0],
+                                 self.route)
+            res = scorer(params, xb)            # async dispatch of batch N
+            if pending is not None:
+                t_prev = _drain(pending, t_prev)  # block on batch N-1 only
+            pending = (res, n_valid)
+        if pending is not None:
+            _drain(pending, t_prev)
+
+        wall = time.perf_counter() - t0
+        out = (np.concatenate(scores) if scores
+               else np.zeros((0,), np.float32))
+        return StreamReport(scores=out, n_windows=int(out.shape[0]),
+                            n_batches=len(walls), wall_s=wall,
+                            batch_walls_s=walls, batch_sizes=sizes)
+
+    def score_naive(self, windows: np.ndarray,
+                    client: Optional[int] = None) -> StreamReport:
+        """The baseline this engine exists to beat: one synchronous
+        batch-1 ``predict_proba`` dispatch per window (no batching, no
+        feed overlap).  Used by benchmarks/bench_serve.py's ≥5× gate."""
+        params = self.params_for(client)
+        scorer = _get_scorer(self.spec, self.meta, 1, self.route)
+        windows = np.asarray(windows)
+        t0 = time.perf_counter()
+        t_prev = t0
+        scores, walls = [], []
+        for i in range(windows.shape[0]):
+            res = scorer(params, jnp.asarray(windows[i:i + 1]))
+            res.block_until_ready()
+            t_now = time.perf_counter()
+            scores.append(np.asarray(res))
+            walls.append(t_now - t_prev)
+            t_prev = t_now
+        wall = time.perf_counter() - t0
+        out = (np.concatenate(scores) if scores
+               else np.zeros((0,), np.float32))
+        return StreamReport(scores=out, n_windows=int(out.shape[0]),
+                            n_batches=len(walls), wall_s=wall,
+                            batch_walls_s=walls, batch_sizes=[1] * len(walls))
+
+    # -- checkpoints ------------------------------------------------------
+
+    @classmethod
+    def from_checkpoint(cls, path: str, *,
+                        buckets: Sequence[int] = batching.DEFAULT_BUCKETS,
+                        route: Optional[str] = None) -> "ServeEngine":
+        """Rebuild an engine from a self-describing serving checkpoint
+        (``save_serving_checkpoint``): the manifest carries the model name
+        and DataMeta, so no config object is needed at load time."""
+        manifest = ckpt_lib.load_manifest(path)
+        info = (manifest.get("metadata") or {}).get("serve")
+        if not info:
+            raise ValueError(
+                f"{path} is not a serving checkpoint (no 'serve' metadata); "
+                "write it with serve.engine.save_serving_checkpoint")
+        meta = DataMeta(n_features=int(info["meta"]["n_features"]),
+                        n_classes=int(info["meta"]["n_classes"]),
+                        hidden=int(info["meta"]["hidden"]),
+                        feature_shape=tuple(info["meta"]["feature_shape"]))
+        spec = get_model_spec(info["model"], meta)
+        template: Dict[str, Any] = {"params": spec.init(jax.random.key(0))}
+        n_heads = int(info.get("n_personalized", 0))
+        if n_heads:
+            template["heads"] = jax.tree.map(
+                lambda x: jnp.zeros((n_heads,) + x.shape, x.dtype),
+                template["params"])
+        tree = ckpt_lib.restore_pytree(path, template)
+        return cls(spec, meta, tree["params"], buckets=buckets, route=route,
+                   heads=tree.get("heads"))
+
+
+def save_serving_checkpoint(path: str, params, model: str, meta: DataMeta,
+                            heads=None, extra_metadata: Optional[dict] = None
+                            ) -> str:
+    """Write a self-describing serving checkpoint: the final-params pytree
+    (plus optional stacked personalized heads) with the model name and
+    :class:`DataMeta` in the manifest, so ``ServeEngine.from_checkpoint``
+    needs only the path.  Integrity contract: restore is bitwise
+    (tests/test_serve.py round-trips every registered spec and pins
+    ``predict_proba`` equality)."""
+    tree: Dict[str, Any] = {"params": params}
+    info = {"model": model, "meta": meta._asdict(),
+            "n_personalized": (0 if heads is None else
+                               int(jax.tree.leaves(heads)[0].shape[0]))}
+    if heads is not None:
+        tree["heads"] = heads
+    return ckpt_lib.save_pytree(
+        path, tree, {"serve": {**info, **(extra_metadata or {})}})

@@ -1,0 +1,44 @@
+"""Double-buffered host→device feed for the streaming scorer (ISSUE 7).
+
+``jax.device_put`` is asynchronous: it returns immediately with a device
+array whose transfer completes in the background.  The feed exploits that
+by staying exactly ONE batch ahead of the consumer — when batch N is
+yielded, batch N+1's upload has already been issued, so the device never
+stalls on host-side staging between dispatches (the same overlap trick as
+the training engine's donated per-lane inputs, ARCHITECTURE.md §Serving).
+
+The consumer side of the pipeline lives in ``engine.ServeEngine``: it
+dispatches the scorer on batch N, and only THEN blocks on batch N−1's
+result — dispatch, upload and compute of adjacent batches all overlap at
+pipeline depth one.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def device_feed(batches: Iterable[Tuple[np.ndarray, int]],
+                sharding: Optional[jax.sharding.Sharding] = None,
+                ) -> Iterator[Tuple[jax.Array, int]]:
+    """(host_batch, n_valid) stream → (device_batch, n_valid) stream with
+    one batch of upload prefetch.
+
+    The generator issues ``device_put`` for batch N+1 *before* yielding
+    batch N; by the time the consumer's dispatch of N returns, N+1 is
+    already in flight.  ``sharding`` optionally pins the placement (a
+    replicated or batch-sharded NamedSharding on multi-device serving).
+    """
+    it = iter(batches)
+    try:
+        x, n = next(it)
+    except StopIteration:
+        return
+    cur = (jax.device_put(x, sharding), n)
+    for x, n in it:
+        nxt = (jax.device_put(x, sharding), n)   # async: upload starts now
+        yield cur
+        cur = nxt
+    yield cur

@@ -126,6 +126,9 @@ class RunResult:
     rounds: int
     eps_spent: float
     history: Dict[str, List[float]] = field(default_factory=dict)
+    # final global model (host numpy pytree), attached only when the caller
+    # asked (run_fl*(..., return_params=True)) — the serving engine's input
+    params: Optional[object] = field(default=None, repr=False)
 
     def time_to_acc(self, target: float) -> float:
         """Simulated seconds until test accuracy first reaches ``target``
@@ -136,15 +139,18 @@ class RunResult:
         return float("inf")
 
 
-def _personalize(params, fed: FederatedData, spec: ModelSpec,
-                 steps: int = 3, lr: float = 0.05,
-                 batch: int = 64, seed: int = 0):
-    """FedL2P-lite personalisation: a few local fine-tune steps per client;
-    returns the average personalised test metrics.  Model-generic: the
-    fine-tune gradient and the test metrics come from the ``spec``."""
+def personalized_client_params(params, fed: FederatedData, spec: ModelSpec,
+                               steps: int = 3, lr: float = 0.05,
+                               batch: int = 64, seed: int = 0) -> List:
+    """FedL2P-lite fine-tuning, parameters only: a few local SGD steps per
+    client from the global ``params``; returns one personalised pytree per
+    client (client order).  The rng draws happen exclusively here, in
+    client order, so splitting metrics out (``_personalize``) or exporting
+    the params for serving (``export_personalized``) is draw-for-draw
+    identical to the original fused loop."""
     rng = np.random.default_rng(seed)
     grad_fn = jax.jit(jax.grad(spec.loss))
-    accs, scores_all = [], []
+    out = []
     for ci in range(fed.n_clients):
         p = params
         for _ in range(steps):
@@ -152,6 +158,32 @@ def _personalize(params, fed: FederatedData, spec: ModelSpec,
             b = {"x": jnp.asarray(fed.x[ci][idx]), "y": jnp.asarray(fed.y[ci][idx])}
             g = grad_fn(p, b)
             p = jax.tree.map(lambda a, gg: a - lr * gg, p, g)
+        out.append(p)
+    return out
+
+
+def export_personalized(params, fed: FederatedData, spec: ModelSpec,
+                        steps: int = 3, lr: float = 0.05,
+                        batch: int = 64, seed: int = 0):
+    """Personalised per-client parameters STACKED along a leading client
+    axis (host numpy) — the ``heads`` pytree the serving engine indexes
+    with ``client=i`` and ``save_serving_checkpoint`` persists."""
+    per_client = personalized_client_params(params, fed, spec, steps=steps,
+                                            lr=lr, batch=batch, seed=seed)
+    return jax.tree.map(lambda *leaves: np.stack([np.asarray(l) for l in leaves]),
+                        *per_client)
+
+
+def _personalize(params, fed: FederatedData, spec: ModelSpec,
+                 steps: int = 3, lr: float = 0.05,
+                 batch: int = 64, seed: int = 0):
+    """FedL2P-lite personalisation: a few local fine-tune steps per client;
+    returns the average personalised test metrics.  Model-generic: the
+    fine-tune gradient and the test metrics come from the ``spec``."""
+    per_client = personalized_client_params(params, fed, spec, steps=steps,
+                                            lr=lr, batch=batch, seed=seed)
+    accs, scores_all = [], []
+    for p in per_client:
         proba = spec.predict_proba(p, jnp.asarray(fed.test_x))[:, 1]
         accs.append(float(spec.accuracy(p, jnp.asarray(fed.test_x),
                                         jnp.asarray(fed.test_y))))
@@ -509,6 +541,7 @@ def run_fl_sweep(
     eval_every: int = 10,
     dataset: str = "unsw",
     hidden: int = 64,
+    return_params: bool = False,
 ) -> List[List[RunResult]]:
     """An entire hyper-parameter sweep as ONE compiled program.
 
@@ -598,11 +631,16 @@ def run_fl_sweep(
                     jax.tree.map(lambda x: x[lane], params_b), fed, spec,
                     seed=seed)
                 sim_time *= 1.2
+            lane_params = None
+            if return_params:
+                lane_params = jax.tree.map(lambda x: np.asarray(x[lane]),
+                                           params_b)
             row.append(RunResult(
                 method=method, dataset=dataset, seed=seed,
                 accuracy=acc, auc=auc,
                 sim_time_s=sim_time, wall_time_s=wall_per_lane,
                 rounds=rounds, eps_spent=eps, history=history,
+                params=lane_params,
             ))
         out.append(row)
     return out
@@ -617,6 +655,7 @@ def run_fl_batch(
     eval_every: int = 10,
     dataset: str = "unsw",
     hidden: int = 64,
+    return_params: bool = False,
 ) -> List[RunResult]:
     """All repeated trials of one (method, dataset) cell as ONE compiled
     program: a single-cell :func:`run_fl_sweep` (vmap over the seed lanes).
@@ -629,7 +668,7 @@ def run_fl_batch(
     """
     return run_fl_sweep(fed, fl, [fl], seeds=seeds, method=method,
                         rounds=rounds, eval_every=eval_every, dataset=dataset,
-                        hidden=hidden)[0]
+                        hidden=hidden, return_params=return_params)[0]
 
 
 def run_fl(
@@ -641,11 +680,12 @@ def run_fl(
     eval_every: int = 10,
     dataset: str = "unsw",
     hidden: int = 64,
+    return_params: bool = False,
 ) -> RunResult:
     """Single-seed front door of the compiled engine (a batch of one)."""
     return run_fl_batch(fed, fl, method, seeds=(seed,), rounds=rounds,
                         eval_every=eval_every, dataset=dataset,
-                        hidden=hidden)[0]
+                        hidden=hidden, return_params=return_params)[0]
 
 
 # ---------------------------------------------------------------------------

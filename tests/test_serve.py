@@ -1,0 +1,327 @@
+"""Streaming anomaly-scoring engine tests (ISSUE 7).
+
+The serving contract is BITWISE: whatever bucket the batcher picks and
+whatever padding it adds, the scores the engine emits must equal the
+same-route ``ModelSpec.predict_proba`` on the same windows, bit for bit —
+batching and double-buffered feeding are pure perf machinery, not math.
+Covered here:
+
+* batching properties (plan/pad/Bucketer order + zero-copy emission);
+* engine-vs-reference bitwise on tabular (mlp) and windowed (cnn) specs,
+  and on BOTH kernel routes of the ``attn`` sequence detector;
+* scorer-cache statics keying: one compile per (model, bucket), zero on
+  rerun — the serving twin of the training engine's runner-cache test;
+* checkpoint round-trip of real trained engine artifacts for EVERY
+  registered spec (satellite: checkpoint/checkpoint.py coverage);
+* personalized per-client heads: serving client i ≡ fine-tuning client i;
+* the double-buffered feed preserves order and content;
+* flash-decode interpret auto-routing (CPU → interpret mode);
+* ``prefill_scan`` ≡ the one-token-at-a-time prefill loop, bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.kernels.flash_decode import resolve_interpret
+from repro.models.spec import get_model_spec, meta_for, model_names
+from repro.serve import (SERVE_STATS, Bucketer, ServeEngine, batches_of,
+                         bucket_for, device_feed, pad_to, plan_chunks,
+                         save_serving_checkpoint)
+from repro.train.fl_driver import (personalized_client_params, run_fl)
+
+
+@pytest.fixture(scope="module")
+def fed_tab():
+    return make_federated(0, "unsw", n_samples=1200, n_clients=6)
+
+
+@pytest.fixture(scope="module")
+def fed_road():
+    return make_federated(0, "road_raw", n_samples=700, n_clients=6)
+
+
+def _fl(model: str, n_clients: int = 6) -> FLConfig:
+    return FLConfig(n_clients=n_clients, clients_per_round=3, rounds=4,
+                    local_epochs=2, local_batch=16, local_lr=0.08,
+                    dp_enabled=False, fault_tolerance=False, model=model)
+
+
+def _train(fed, model: str):
+    res = run_fl(fed, _fl(model), "random", seed=0, rounds=4, eval_every=2,
+                 return_params=True)
+    assert res.params is not None
+    return res.params
+
+
+def _ref_scores(spec, params, x, route) -> np.ndarray:
+    """The pinned reference: COMPILED ``predict_proba_routed`` on the exact
+    windows, no padding, no bucketing.  Compiled (not eager) because XLA's
+    op-by-op eager dispatch fuses differently from jit and can differ in
+    the last ULP on reduction-heavy routes; the serving contract is that
+    batching, padding and feeding change no bits relative to the compiled
+    single-shot reference."""
+    fn = jax.jit(lambda p, z: spec.predict_proba_routed(p, z, route))
+    return np.asarray(fn(params, jnp.asarray(x))[:, 1])
+
+
+@pytest.fixture(scope="module")
+def mlp_trained(fed_tab):
+    return _train(fed_tab, "mlp")
+
+
+# ---------------------------------------------------------------------------
+# batching
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_covers_and_uses_buckets():
+    buckets = (8, 32)
+    for n in (1, 7, 8, 9, 31, 32, 33, 100, 129):
+        chunks = plan_chunks(n, buckets)
+        assert sum(chunks) >= n
+        assert all(c in buckets for c in chunks)
+        # greedy: everything except the remainder runs at the max bucket
+        assert all(c == 32 for c in chunks[:-1])
+
+
+def test_bucket_for_picks_smallest_fit():
+    assert bucket_for(1, (8, 32)) == 8
+    assert bucket_for(8, (8, 32)) == 8
+    assert bucket_for(9, (8, 32)) == 32
+    with pytest.raises(ValueError, match="exceed"):
+        bucket_for(33, (8, 32))
+
+
+def test_pad_to_preserves_rows():
+    x = np.arange(12, dtype=np.float32).reshape(3, 4)
+    padded, n = pad_to(x, 8)
+    assert n == 3 and padded.shape == (8, 4)
+    assert np.array_equal(padded[:3], x) and not padded[3:].any()
+
+
+def test_bucketer_preserves_order_and_emits_zero_copy():
+    rng = np.random.default_rng(0)
+    chunks = [rng.normal(size=(m, 5)).astype(np.float32)
+              for m in (3, 40, 1, 31, 7)]
+    bk = Bucketer((8, 32))
+    batches = []
+    for c in chunks:
+        batches.extend(bk.add(c))
+    batches.extend(bk.flush())
+    assert bk.pending == 0
+    # full batches are exactly max-bucket sized, remainder batches padded
+    assert all(b.shape[0] in (8, 32) for b, _ in batches)
+    got = np.concatenate([b[:n] for b, n in batches])
+    assert np.array_equal(got, np.concatenate(chunks))
+
+
+def test_batches_of_roundtrip():
+    rng = np.random.default_rng(1)
+    chunks = [rng.normal(size=(m, 3)).astype(np.float32) for m in (5, 9, 2)]
+    got = np.concatenate(
+        [b[:n] for b, n in batches_of(iter(chunks), (4, 16))])
+    assert np.array_equal(got, np.concatenate(chunks))
+
+
+# ---------------------------------------------------------------------------
+# feed
+# ---------------------------------------------------------------------------
+
+
+def test_device_feed_preserves_order_and_content():
+    rng = np.random.default_rng(2)
+    batches = [(rng.normal(size=(4, 3)).astype(np.float32), 4 - i)
+               for i in range(5)]
+    out = list(device_feed(iter(batches)))
+    assert [n for _, n in out] == [n for _, n in batches]
+    for (xd, _), (xh, _) in zip(out, batches):
+        assert isinstance(xd, jax.Array)
+        assert np.array_equal(np.asarray(xd), xh)
+    assert list(device_feed(iter([]))) == []
+
+
+# ---------------------------------------------------------------------------
+# engine vs reference: bitwise
+# ---------------------------------------------------------------------------
+
+
+def test_engine_bitwise_mlp_uneven(fed_tab, mlp_trained):
+    meta = meta_for(fed_tab)
+    spec = get_model_spec("mlp", meta)
+    eng = ServeEngine(spec, meta, mlp_trained, buckets=(8, 32))
+    x = np.asarray(fed_tab.test_x[:37], np.float32)   # 32 + padded 8
+    ref = _ref_scores(spec, mlp_trained, x, eng.route)
+    assert np.array_equal(eng.score(x), ref)
+    # streamed in awkward arrival chunks: same bits, same order
+    rep = eng.score_stream([x[i:i + 11] for i in range(0, 37, 11)])
+    assert np.array_equal(rep.scores, ref)
+    assert rep.n_windows == 37 and rep.n_batches == len(rep.batch_walls_s)
+    assert rep.windows_per_sec > 0 and rep.p99_s >= rep.p50_s
+
+
+def test_engine_bitwise_cnn_windowed(fed_road):
+    params = _train(fed_road, "cnn")
+    meta = meta_for(fed_road)
+    spec = get_model_spec("cnn", meta)
+    eng = ServeEngine(spec, meta, params, buckets=(8, 32))
+    x = np.asarray(fed_road.test_x[:21], np.float32)
+    ref = _ref_scores(spec, params, x, eng.route)
+    assert np.array_equal(eng.score(x), ref)
+
+
+def test_engine_bitwise_attn_both_routes(fed_road):
+    """The sequence detector must serve bitwise on BOTH kernel routes:
+    'kernel' (Pallas flash_attention/flash_decode — interpret mode on CPU)
+    and 'ref' (the pure-jnp oracles)."""
+    params = _train(fed_road, "attn")
+    meta = meta_for(fed_road)
+    spec = get_model_spec("attn", meta)
+    x = np.asarray(fed_road.test_x[:13], np.float32)
+    for route in ("kernel", "ref"):
+        eng = ServeEngine(spec, meta, params, buckets=(4, 16), route=route)
+        ref = _ref_scores(spec, params, x, route)
+        assert np.array_equal(eng.score(x), ref), route
+
+
+def test_engine_rejects_unknown_route(fed_road):
+    meta = meta_for(fed_road)
+    spec = get_model_spec("attn", meta)
+    with pytest.raises(KeyError, match="no score route"):
+        ServeEngine(spec, meta, spec.init(jax.random.key(0)), route="nope")
+
+
+# ---------------------------------------------------------------------------
+# scorer cache: one compile per (model, bucket)
+# ---------------------------------------------------------------------------
+
+
+def test_scorer_cache_single_compile(fed_tab, mlp_trained):
+    meta = meta_for(fed_tab)
+    spec = get_model_spec("mlp", meta)
+    eng = ServeEngine(spec, meta, mlp_trained, buckets=(8, 32))
+    x = np.asarray(fed_tab.test_x[:70], np.float32)
+
+    eng.warmup()
+    before = dict(SERVE_STATS)
+    eng.score(x)
+    eng.score_stream([x[i:i + 17] for i in range(0, 70, 17)])
+    after = dict(SERVE_STATS)
+    assert after["misses"] == before["misses"], \
+        "serving after warmup must not compile new programs"
+    assert after["hits"] > before["hits"]
+
+    # a second engine on the same (model, meta, buckets): all cache hits
+    before = dict(SERVE_STATS)
+    eng2 = ServeEngine(spec, meta, mlp_trained, buckets=(8, 32))
+    eng2.score(x)
+    assert SERVE_STATS["misses"] == before["misses"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip: every registered spec (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_all_registered_specs(tmp_path, fed_tab,
+                                                   fed_road, mlp_trained):
+    """Train → save → restore → score: bitwise, for every registered model.
+
+    This is the checkpoint substrate exercised with REAL engine artifacts
+    (run_fl final params), not toy pytrees: '/'-joined key flattening,
+    dtype round-trip through .npz, manifest-driven template rebuild."""
+    for name in sorted(model_names()):
+        fed = fed_tab if name == "mlp" else fed_road
+        params = mlp_trained if name == "mlp" else _train(fed, name)
+        meta = meta_for(fed)
+        spec = get_model_spec(name, meta)
+        path = save_serving_checkpoint(str(tmp_path / f"serve_{name}"),
+                                       params, name, meta)
+        eng = ServeEngine.from_checkpoint(path)
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(eng.params)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), name
+        x = np.asarray(fed.test_x[:9], np.float32)
+        want = _ref_scores(spec, params, x, eng.route)
+        assert np.array_equal(eng.score(x), want), name
+
+
+def test_from_checkpoint_rejects_non_serving(tmp_path):
+    from repro.checkpoint import checkpoint as ckpt_lib
+    p = ckpt_lib.save_pytree(str(tmp_path / "plain"), {"w": np.ones(3)})
+    with pytest.raises(ValueError, match="not a serving checkpoint"):
+        ServeEngine.from_checkpoint(p)
+
+
+# ---------------------------------------------------------------------------
+# personalized per-client heads
+# ---------------------------------------------------------------------------
+
+
+def test_personalized_heads_bitwise(tmp_path, fed_tab, mlp_trained):
+    from repro.train.fl_driver import export_personalized
+    meta = meta_for(fed_tab)
+    spec = get_model_spec("mlp", meta)
+    heads = export_personalized(mlp_trained, fed_tab, spec)
+    path = save_serving_checkpoint(str(tmp_path / "serve_p"), mlp_trained,
+                                   "mlp", meta, heads=heads)
+    eng = ServeEngine.from_checkpoint(path, buckets=(8, 32))
+    assert eng.n_personalized == fed_tab.n_clients
+
+    per_client = personalized_client_params(mlp_trained, fed_tab, spec)
+    x = np.asarray(fed_tab.test_x[:11], np.float32)
+    for ci in (0, fed_tab.n_clients - 1):
+        want = _ref_scores(spec, per_client[ci], x, eng.route)
+        assert np.array_equal(eng.score(x, client=ci), want)
+
+    with pytest.raises(ValueError, match="no personalized heads"):
+        ServeEngine(spec, meta, mlp_trained).score(x, client=0)
+
+
+# ---------------------------------------------------------------------------
+# kernels: interpret auto-routing (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_interpret_routes_by_backend():
+    # explicit values pass through untouched
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    # None resolves by backend: interpret everywhere except real TPU
+    expect = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expect
+
+
+# ---------------------------------------------------------------------------
+# prefill scan (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_prefill_scan_matches_loop():
+    from repro.configs.base import get_arch
+    from repro.launch.serve import prefill_scan
+    from repro.models.model import build
+
+    cfg = get_arch("mamba2_130m", smoke=True)
+    model = build(cfg)
+    params = model.init(jax.random.key(0))
+    w = cfg.sliding_window
+    prompts = jax.random.randint(jax.random.key(1), (2, 10), 0,
+                                 cfg.vocab_size, jnp.int32)
+    decode = jax.jit(
+        lambda p, t, c, i: model.decode_step(p, t, c, i, window=w))
+
+    caches = model.init_cache(2, 16, params=params, window=w)
+    logits = None
+    for t in range(10):
+        logits, caches = decode(params, prompts[:, t:t + 1], caches,
+                                jnp.asarray(t))
+
+    caches_s = model.init_cache(2, 16, params=params, window=w)
+    logits_s, caches_s = prefill_scan(model, params, prompts, caches_s,
+                                      window=w)
+    assert np.array_equal(np.asarray(logits), np.asarray(logits_s))
+    for a, b in zip(jax.tree.leaves(caches), jax.tree.leaves(caches_s)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
