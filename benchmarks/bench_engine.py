@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 
@@ -57,32 +56,44 @@ def run(csv_rows: list) -> dict:
     fed = make_federated(0, "unsw", n_samples=8_000, n_clients=N_CLIENTS)
     fl = _bench_config()
 
-    legacy_walls = []
-    for _ in range(2):   # min-of-2: the gate never reads a single run
-        t0 = time.time()
-        legacy = fl_driver.run_fl_legacy(fed, fl, "proposed", seed=0,
-                                         rounds=ROUNDS, eval_every=EVAL_EVERY)
-        legacy_walls.append(time.time() - t0)
-    t_legacy = min(legacy_walls)
+    # min-of-2: the gate never reads a single run
+    t_legacy, legacy_walls, legacy = common.wall_min(
+        lambda: fl_driver.run_fl_legacy(fed, fl, "proposed", seed=0,
+                                        rounds=ROUNDS,
+                                        eval_every=EVAL_EVERY),
+        2, label="engine.legacy")
 
-    t0 = time.time()
-    scan = fl_driver.run_fl(fed, fl, "proposed", seed=0, rounds=ROUNDS,
-                            eval_every=EVAL_EVERY)
-    t_scan = time.time() - t0
+    scan, t_scan = common.timed_call(
+        lambda: fl_driver.run_fl(fed, fl, "proposed", seed=0, rounds=ROUNDS,
+                                 eval_every=EVAL_EVERY),
+        label="engine.scan_cold")
 
-    t0 = time.time()
-    batch = fl_driver.run_fl_batch(fed, fl, "proposed", seeds=SEEDS,
-                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
-    t_batch = time.time() - t0
+    def batch_call():
+        return fl_driver.run_fl_batch(fed, fl, "proposed", seeds=SEEDS,
+                                      rounds=ROUNDS, eval_every=EVAL_EVERY)
+
+    _, t_batch = common.timed_call(batch_call, label="engine.batch_cold")
 
     # steady-state: later calls hit fl_driver's compiled-runner cache — this
     # is what every later cell/repetition of a sweep actually costs.  Min
     # of 3 (noisy shared machine; see module docstring).
-    t_warm, warm_walls = common.warm_min(
-        lambda: fl_driver.run_fl_batch(fed, fl, "proposed", seeds=SEEDS,
-                                       rounds=ROUNDS, eval_every=EVAL_EVERY),
-        3)
+    t_warm, warm_walls = common.warm_min(batch_call, 3)
     compile_s = max(t_batch - t_warm, 0.0)
+
+    # telemetry overhead: the SAME warm cell with the host tracer recording
+    # spans, against the tracer-off min-of-3 above.  The acceptance target
+    # is ≤5% (ISSUE 8); recorded rather than hard-asserted because this
+    # container's wall noise routinely exceeds 5% by itself — the store
+    # history + tools/bench_regress.py is the durable guard.
+    from repro.obs import TRACER
+    was_enabled = TRACER.enabled
+    TRACER.enable()
+    try:
+        t_traced, traced_walls = common.warm_min(batch_call, 3)
+    finally:
+        if not was_enabled:
+            TRACER.disable()
+    telemetry_ratio = t_traced / t_warm
 
     n_seeds = len(SEEDS)
     report = {
@@ -131,9 +142,29 @@ def run(csv_rows: list) -> dict:
             "eps_scan": scan.eps_spent,
             "eps_abs_diff": abs(legacy.eps_spent - scan.eps_spent),
         },
+        "telemetry": {
+            "execute_s_min_off": t_warm,
+            "execute_s_min_on": t_traced,
+            "execute_s_all_on": traced_walls,
+            "ratio": telemetry_ratio,
+            "within_5pct": bool(telemetry_ratio <= 1.05),
+        },
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
+
+    common.record_bench("engine", [
+        {"lane_key": "batch_warm", "statics_key": common.statics_key(fl),
+         "wall_cold_s": t_batch, "warm_walls": warm_walls,
+         "lane_params": {"n_clients": N_CLIENTS, "rounds": ROUNDS,
+                         "n_seeds": n_seeds},
+         "metrics": {"acceptance_ratio": (report["acceptance"]["ratio"], -1),
+                     "acc_abs_diff": report["equivalence"]["acc_abs_diff"],
+                     "telemetry_ratio": telemetry_ratio}},
+        {"lane_key": "legacy_single", "statics_key": common.statics_key(fl),
+         "warm_walls": legacy_walls,
+         "lane_params": {"n_clients": N_CLIENTS, "rounds": ROUNDS}},
+    ])
 
     print(f"  legacy single-seed : {t_legacy:7.2f}s min-of-2 "
           f"({ROUNDS / t_legacy:6.1f} rounds/s)")
@@ -150,6 +181,8 @@ def run(csv_rows: list) -> dict:
     print(f"  equivalence: |acc diff| = "
           f"{report['equivalence']['acc_abs_diff']:.4f}, |eps diff| = "
           f"{report['equivalence']['eps_abs_diff']:.2e}")
+    print(f"  telemetry overhead: {telemetry_ratio:.3f}x warm "
+          f"(target <=1.05: {report['telemetry']['within_5pct']})")
     print(f"  -> {os.path.abspath(OUT)}")
 
     csv_rows.append(("engine/legacy_single_rps", t_legacy * 1e6 / ROUNDS,

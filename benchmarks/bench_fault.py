@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -92,10 +91,11 @@ def run(csv_rows: list) -> dict:
     # ---- frontier: every (process × rate) as runtime lanes, ONE compile ----
     fl_driver._RUNNER_CACHE.clear()
     m0 = fl_driver.RUNNER_STATS["misses"]
-    t0 = time.time()
-    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
-                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
-    t_cold = time.time() - t0
+    sweep, t_cold = common.timed_call(
+        lambda: fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                       rounds=ROUNDS,
+                                       eval_every=EVAL_EVERY),
+        label="fault.frontier_cold")
     misses = fl_driver.RUNNER_STATS["misses"] - m0
     assert misses == 1, (
         f"the whole (process x rate x seed) frontier must compile exactly "
@@ -216,6 +216,29 @@ def run(csv_rows: list) -> dict:
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
+
+    common.record_bench("fault", [
+        {"lane_key": "frontier", "statics_key": common.statics_key(fl),
+         "wall_cold_s": t_cold, "warm_walls": warm_walls,
+         "lane_params": {"n_lanes": n_lanes, "rounds": ROUNDS,
+                         "rates": list(RATES)},
+         "metrics": {"runner_compiles": float(misses)}},
+    ] + [
+        {"lane_key": f"{e['process']}@{e['rate']:.2f}",
+         "statics_key": common.statics_key(fl),
+         "lane_params": {"process": e["process"], "rate": e["rate"]},
+         "metrics": {"auc_mean": (e["auc_mean"], 1),
+                     "acc_mean": e["acc_mean"],
+                     "sim_time_mean": e["sim_time_mean"],
+                     "fail_rate_observed": e["fail_rate_observed"]}}
+        for e in frontier
+    ] + [
+        {"lane_key": "coupling_gate", "statics_key": common.statics_key(fl),
+         "lane_params": {"rate": GATE_RATE, "burst": GATE_BURST,
+                         "rounds": GATE_ROUNDS},
+         "metrics": {"p_value": p_val,
+                     "coupling_saves_time": float(gate)}},
+    ], mode=mode)
 
     print(f"  frontier x{n_lanes} lanes: {t_cold:7.2f}s cold, "
           f"{t_warm:.2f}s warm (min-of-{WARM_N}), 1 compile")

@@ -32,7 +32,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -88,10 +87,11 @@ def run(csv_rows: list) -> dict:
         cfg = _bench_fl(model=model)
         fed = feds[ds]
         m0 = fl_driver.RUNNER_STATS["misses"]
-        t0 = time.time()
-        res = fl_driver.run_fl_batch(fed, cfg, "proposed", seeds=SEEDS,
-                                     rounds=ROUNDS, eval_every=EVAL_EVERY)
-        cold_s = time.time() - t0
+        res, cold_s = common.timed_call(
+            lambda fed=fed, cfg=cfg: fl_driver.run_fl_batch(
+                fed, cfg, "proposed", seeds=SEEDS, rounds=ROUNDS,
+                eval_every=EVAL_EVERY),
+            label="models.cold")
         misses = fl_driver.RUNNER_STATS["misses"] - m0
         assert misses == 1, (
             f"({ds}, {model}): expected exactly one compile for the seed "
@@ -145,6 +145,19 @@ def run(csv_rows: list) -> dict:
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
+
+    common.record_bench("models", [
+        {"lane_key": f"{c['dataset']}/{c['model']}",
+         "statics_key": common.statics_key(_bench_fl(model=c["model"])),
+         "wall_cold_s": c["cold_s_unaudited"],
+         "warm_walls": c["warm_execute_s_all"],
+         "lane_params": {"dataset": c["dataset"], "model": c["model"],
+                         "rounds": ROUNDS, "seeds": list(SEEDS)},
+         "metrics": {"auc_mean": (c["auc_mean"], 1),
+                     "acc_mean": c["acc_mean"],
+                     "runner_compiles": float(c["runner_compiles"])}}
+        for c in cells
+    ], mode=mode)
 
     print(f"  road_raw: best window-native auc {best_window:.3f} vs "
           f"flattened mlp {road['mlp']:.3f} -> "

@@ -26,7 +26,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 
 import jax
 import numpy as np
@@ -70,10 +69,11 @@ def run(csv_rows: list) -> dict:
     cells = [{"dp_budget": b} for b in BUDGETS]
     fl_driver._RUNNER_CACHE.clear()
     m0 = fl_driver.RUNNER_STATS["misses"]
-    t0 = time.time()
-    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
-                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
-    t_frontier_cold = time.time() - t0
+    sweep, t_frontier_cold = common.timed_call(
+        lambda: fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                       rounds=ROUNDS,
+                                       eval_every=EVAL_EVERY),
+        label="privacy.frontier_cold")
     misses = fl_driver.RUNNER_STATS["misses"] - m0
     assert misses == 1, (
         f"the whole budget frontier must compile exactly one runner, got "
@@ -172,6 +172,23 @@ def run(csv_rows: list) -> dict:
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
+
+    common.record_bench("privacy", [
+        {"lane_key": f"budget{c['budget']:.0f}",
+         "statics_key": common.statics_key(fl),
+         "lane_params": {"budget": c["budget"], "rounds": ROUNDS,
+                         "seeds": list(SEEDS)},
+         "metrics": {"auc_mean": (c["auc_mean"], 1),
+                     "eps_spent_mean": c["eps_spent_mean"],
+                     "live_frac_last": c["live_frac_last"]}}
+        for c in frontier
+    ] + [
+        {"lane_key": "overhead", "statics_key": common.statics_key(sched),
+         "warm_walls": sched_walls,
+         "lane_params": {"warm_n": WARM_N},
+         "metrics": {"overhead_ratio": (overhead, -1),
+                     "accountant_rel_err": eps_err}},
+    ], mode=mode)
 
     print(f"  frontier x{n_lanes} lanes (adaptive): "
           f"{t_frontier_cold:7.2f}s cold, 1 compile")

@@ -62,7 +62,7 @@ def scale_fl(n: int) -> FLConfig:
     )
 
 
-def main():
+def run(csv_rows: list) -> dict:
     report = {"engine_rev": common.ENGINE_REV, "smoke": SMOKE,
               "device": jax.devices()[0].device_kind,
               "n_devices": jax.device_count(),
@@ -77,14 +77,14 @@ def main():
                               members_per_client=MEMBERS)
         gen_s = time.time() - t0
 
-        def run():
+        def run_pop():
             return fl_driver.run_fl_population(
                 pop, fl, seeds=SEEDS, rounds=ROUNDS, eval_every=ROUNDS)
 
         t0 = time.time()
-        res = run()
+        res = run_pop()
         cold_s = time.time() - t0
-        warm, walls = common.warm_min(run, WARM_N)
+        warm, walls = common.warm_min(run_pop, WARM_N)
         acc = float(np.mean([r.accuracy for r in res[0]]))
         assert np.isfinite(acc), f"non-finite accuracy at N={n}"
         rows.append({
@@ -144,6 +144,34 @@ def main():
         json.dump(report, f, indent=1)
     print(json.dumps(report["sublinear"], indent=1))
     print(f"wrote {OUT}")
+
+    # experiment-store write-through (docs/DESIGN.md §8): one cell per
+    # population, warm wall gated (lower-better), plus the sublinear ratio
+    common.record_bench("scale", [
+        {"lane_key": f"pop{r['n_clients']}",
+         "statics_key": common.statics_key(scale_fl(r["n_clients"])),
+         "wall_cold_s": r["cold_s"], "warm_walls": r["warm_walls_s"],
+         "lane_params": {"n_clients": r["n_clients"], "rounds": ROUNDS,
+                         "k_max": K_MAX, "seeds": list(SEEDS)},
+         "metrics": {"accuracy": r["accuracy"],
+                     "gen_s": r["gen_s"],
+                     "warm_round_s": r["warm_round_s"]}}
+        for r in rows
+    ] + [
+        {"lane_key": "sublinear",
+         "lane_params": {"pop_ratio": report["sublinear"]["pop_ratio"]},
+         "metrics": {"wall_ratio": (report["sublinear"]["wall_ratio"], -1),
+                     "ok": float(report["sublinear"]["ok"])}}
+    ], mode="smoke" if SMOKE else "full")
+
+    for r in rows:
+        csv_rows.append((f"scale/pop{r['n_clients']}/warm_round",
+                         r["warm_round_s"] * 1e6, r["accuracy"]))
+    return report
+
+
+def main():
+    run([])
 
 
 if __name__ == "__main__":

@@ -200,6 +200,21 @@ def run(csv_rows: list) -> dict:
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
     print(f"  -> {os.path.abspath(OUT)}")
+
+    common.record_bench("serve", [
+        {"lane_key": f"{c['dataset']}/{c['model']}/b{c['bucket']}",
+         "lane_params": {"dataset": c["dataset"], "model": c["model"],
+                         "bucket": c["bucket"], "route": c["route"]},
+         "metrics": {"windows_per_sec": (c["windows_per_sec"], 1),
+                     "p50_ms": c["p50_ms"], "p99_ms": c["p99_ms"],
+                     "auc": c["auc"]}}
+        for c in cells
+    ] + [
+        {"lane_key": f"{n['dataset']}/{n['model']}/speedup",
+         "lane_params": {"dataset": n["dataset"], "model": n["model"]},
+         "metrics": {"speedup_vs_naive": (n["speedup_vs_naive"], 1)}}
+        for n in naives
+    ], mode=mode)
     return report
 
 

@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import dataclasses
 
@@ -88,20 +87,25 @@ def run(csv_rows: list) -> dict:
     percell_walls = []
     for cell in cells:
         _clear_runner_cache()  # pre-refactor: each cell paid its own compile
-        t0 = time.time()
-        percell_results.append(fl_driver.run_fl_batch(
-            fed, cell, "proposed", seeds=SEEDS, rounds=ROUNDS,
-            eval_every=EVAL_EVERY))
-        percell_walls.append(time.time() - t0)
+        res, wall = common.timed_call(
+            lambda cell=cell: fl_driver.run_fl_batch(
+                fed, cell, "proposed", seeds=SEEDS, rounds=ROUNDS,
+                eval_every=EVAL_EVERY),
+            label="sweep.percell_cold")
+        percell_results.append(res)
+        percell_walls.append(wall)
     t_percell_cold = sum(percell_walls)
 
     # ---- per-cell under the new static-keyed cache (hits after cell 0) ----
     _clear_runner_cache()
-    t0 = time.time()
-    for cell in cells:
-        fl_driver.run_fl_batch(fed, cell, "proposed", seeds=SEEDS,
-                               rounds=ROUNDS, eval_every=EVAL_EVERY)
-    t_percell_shared_cold = time.time() - t0
+
+    def _percell_all():
+        for cell in cells:
+            fl_driver.run_fl_batch(fed, cell, "proposed", seeds=SEEDS,
+                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
+
+    _, t_percell_shared_cold = common.timed_call(
+        _percell_all, label="sweep.percell_shared_cold")
     def _percell_pass():
         for cell in cells:
             fl_driver.run_fl_batch(fed, cell, "proposed", seeds=SEEDS,
@@ -112,10 +116,11 @@ def run(csv_rows: list) -> dict:
     # ---- the sweep: one program for the whole grid ----
     _clear_runner_cache()
     m0 = fl_driver.RUNNER_STATS["misses"]
-    t0 = time.time()
-    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
-                                   rounds=ROUNDS, eval_every=EVAL_EVERY)
-    t_sweep_cold = time.time() - t0
+    sweep, t_sweep_cold = common.timed_call(
+        lambda: fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                       rounds=ROUNDS,
+                                       eval_every=EVAL_EVERY),
+        label="sweep.cold")
     sweep_misses = fl_driver.RUNNER_STATS["misses"] - m0
     t_sweep_exec, sweep_exec = common.warm_min(
         lambda: fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
@@ -194,6 +199,18 @@ def run(csv_rows: list) -> dict:
     }
     with open(OUT, "w") as f:
         json.dump(report, f, indent=1)
+
+    common.record_bench("sweep", [
+        {"lane_key": "sweep_warm", "statics_key": common.statics_key(fl),
+         "wall_cold_s": t_sweep_cold, "warm_walls": sweep_exec,
+         "lane_params": {"n_lanes": n_lanes, "rounds": ROUNDS,
+                         "epsilons": list(EPSILONS)},
+         "metrics": {"acceptance_ratio": (ratio, -1),
+                     "max_abs_acc_diff": acc_diff}},
+        {"lane_key": "percell_warm", "statics_key": common.statics_key(fl),
+         "wall_cold_s": t_percell_shared_cold, "warm_walls": percell_exec,
+         "lane_params": {"n_cells": len(cells), "rounds": ROUNDS}},
+    ], mode=mode)
 
     print(f"  per-cell (compile per cell) : {t_percell_cold:7.2f}s cold "
           f"({len(cells)} compiles)")

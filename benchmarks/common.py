@@ -13,13 +13,16 @@ Single cells go through the same path (``run_sweep_cells`` with one cell).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.configs.base import FLConfig
+from repro.configs.base import FLConfig, fl_static
 from repro.data.synthetic import make_federated
+from repro.obs import trace as obs_trace
+from repro.obs.store import default_store
 from repro.train.fl_driver import RunResult, run_fl_sweep
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
@@ -73,17 +76,76 @@ def base_fl(n_clients: int = N_CLIENTS, **kw) -> FLConfig:
 ENGINE_REV = "models4"
 
 
+def wall_min(fn: Callable[[], object], n: int, label: str = "warm",
+             ) -> Tuple[float, List[float], object]:
+    """(min, all, last_result) wall seconds of ``n`` calls of an
+    already-compiled ``fn`` — the ONLY timing protocol acceptance gates
+    may use on this container (very noisy wall clocks: a gate must never
+    read a single cold run).  Compile/warm ``fn`` once before calling
+    this.  Each repetition opens a host span ``bench.<label>`` (no-op
+    while the tracer is off), so ``--profile`` / ``REPRO_TRACE`` runs
+    show every timed call on the timeline."""
+    walls, result = [], None
+    for i in range(n):
+        with obs_trace.span(f"bench.{label}", rep=i, n=n):
+            t0 = time.time()
+            result = fn()
+            walls.append(time.time() - t0)
+    return min(walls), walls, result
+
+
 def warm_min(fn: Callable[[], object], n: int) -> Tuple[float, List[float]]:
-    """(min, all) wall seconds of ``n`` calls of an already-compiled
-    ``fn`` — the ONLY timing protocol acceptance gates may use on this
-    container (very noisy wall clocks: a gate must never read a single
-    cold run).  Compile/warm ``fn`` once before calling this."""
-    walls = []
-    for _ in range(n):
+    """Legacy two-tuple view of :func:`wall_min` (the benches' historical
+    signature)."""
+    t_min, walls, _ = wall_min(fn, n)
+    return t_min, walls
+
+
+def timed_call(fn: Callable[[], object], label: str = "cold",
+               ) -> Tuple[object, float]:
+    """(result, wall seconds) of one call under a ``bench.<label>`` span —
+    the cold/compile timing counterpart of :func:`wall_min`."""
+    with obs_trace.span(f"bench.{label}"):
         t0 = time.time()
-        fn()
-        walls.append(time.time() - t0)
-    return min(walls), walls
+        result = fn()
+        wall = time.time() - t0
+    return result, wall
+
+
+def statics_key(fl: FLConfig) -> str:
+    """12-hex fingerprint of the config's STATIC fields — the compiled
+    program family a store lane compares against (two cells with equal
+    ``statics_key`` + ENGINE_REV ran the same lowered program shape)."""
+    return hashlib.md5(repr(fl_static(fl)).encode()).hexdigest()[:12]
+
+
+def record_bench(bench: str, cells: Sequence[Dict[str, Any]],
+                 mode: str = "full", note: str = "") -> Optional[int]:
+    """Write one bench invocation through to the experiment store
+    (docs/DESIGN.md §8) while the bench still emits its legacy
+    ``BENCH_*.json``.  Each cell dict: ``lane_key`` (required) plus any of
+    ``statics_key``, ``wall_cold_s``, ``wall_warm_s``, ``warm_walls``,
+    ``lane_params``, ``metrics`` (name → value or (value, ±1) for gated).
+    Returns the store run_id, or None when the store is unavailable (a
+    bench never dies on telemetry)."""
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "unknown"
+    try:
+        store = default_store()
+        run_id = store.begin_run(engine_rev=ENGINE_REV, backend=backend,
+                                 mode=mode, note=note)
+        for cell in cells:
+            cell = dict(cell)
+            store.record_cell(run_id, bench, cell.pop("lane_key"), **cell)
+        obs_trace.event("store.record_bench", bench=bench,
+                        run_id=run_id, n_cells=len(cells))
+        return run_id
+    except Exception as e:  # pragma: no cover - defensive
+        print(f"[obs] store write failed for {bench}: {e}")
+        return None
 
 
 def _key(method, dataset, seed, tag):

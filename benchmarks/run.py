@@ -1,4 +1,4 @@
-"""Benchmark orchestrator — one section per paper table/figure + roofline.
+"""Benchmark orchestrator — discovers and runs every ``bench_*.py``.
 
 Prints ``name,us_per_call,derived`` CSV lines at the end (harness contract);
 the human-readable tables stream as each section runs.
@@ -15,6 +15,8 @@ the human-readable tables stream as each section runs.
            RG-LRU on raw ROAD windows (writes BENCH_models.json)
   serve  — streaming anomaly scoring: bucketed double-buffered engine vs
            naive per-window loop (writes BENCH_serve.json)
+  scale  — population-scale cohort engine, sublinear-wall gate
+           (writes BENCH_scale.json)
   table1 — method comparison (paper Table I)
   table2 — fault tolerance ablation (paper Table II)
   fig3   — privacy budget sweep (paper Fig. 3)
@@ -22,16 +24,97 @@ the human-readable tables stream as each section runs.
   kernels— per-kernel CPU-interpret timings vs jnp oracle
   roofline — summarised from dry-run artifacts (if present)
 
-The paper tables run every uncached (method, dataset) GRID as one compiled
-program (run_fl_sweep — runtime hyper-parameter lanes); see EXPERIMENTS.md
-§Sweeps.
+Any ``benchmarks/bench_*.py`` not in the preferred order above is picked up
+automatically (alphabetically, after the known ones) as long as it exposes
+``run(csv_rows) -> report``.
+
+Flags:
+
+* ``--smoke``   — export every ``REPRO_*_SMOKE=1`` BEFORE importing the
+  bench modules (they size their grids at import time), shrinking the run
+  to CI scale.  ``bench_engine`` has no smoke knob and runs as-is.
+* ``--only a,b``— run only the named benches (e.g. ``--only sweep,serve``).
+* ``--list``    — print the discovered benches and exit.
+* ``--profile [LOGDIR]`` — wrap the whole run in ``jax.profiler`` via
+  ``repro.obs.profile_trace``; view with ``tensorboard --logdir LOGDIR``.
+
+Exit code: non-zero if any bench raised OR any *gated* acceptance flag in a
+bench's report came back false (each ``GATES`` entry names the pass flag
+and the ``gated`` switch inside the report; smoke grids un-gate wall-clock
+verdicts, so ``--smoke`` runs gate correctness only).  Store write-through
+happens inside each bench (``benchmarks/common.record_bench``); regression
+detection against that history is ``tools/bench_regress.py``'s job, not
+ours.
 
 Env: REPRO_FULL=1 for the paper's full 40-client/200-round/10-seed setting.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import contextlib
+import importlib
+import os
 import time
+import traceback
+
+# benches whose import-time grid sizing reads a smoke env var
+SMOKE_VARS = (
+    "REPRO_SWEEP_SMOKE", "REPRO_PRIVACY_SMOKE", "REPRO_FAULT_SMOKE",
+    "REPRO_MODELS_SMOKE", "REPRO_SCALE_SMOKE", "REPRO_SERVE_SMOKE",
+)
+
+# canonical run order; discovery appends anything new alphabetically
+PREFERRED_ORDER = (
+    "engine", "sweep", "privacy", "fault", "models", "serve", "scale",
+    "table1", "table2", "fig3", "table3",
+)
+
+# report-dict gates: bench -> list of (pass_flag_path, gated_switch_path).
+# A None switch means always gated.  Paths are dotted keys into the report.
+GATES = {
+    "engine": [("acceptance.pass_under_2x", None)],
+    "sweep": [("acceptance.pass_warm_not_slower", "acceptance.gated")],
+    "privacy": [("overhead.pass_within_5pct", "overhead.gated")],
+    "fault": [("coupling_gate.coupling_saves_time", "coupling_gate.gated")],
+    "models": [("road_raw_auc.window_native_matches_or_beats_mlp",
+                "road_raw_auc.gated")],
+    "serve": [("gate.all_models_pass", "gate.gated")],
+    "scale": [("sublinear.ok", None)],
+}
+
+
+def discover() -> list:
+    """Every ``benchmarks/bench_*.py``: preferred order first, new last."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    found = sorted(f[len("bench_"):-len(".py")] for f in os.listdir(here)
+                   if f.startswith("bench_") and f.endswith(".py"))
+    ordered = [n for n in PREFERRED_ORDER if n in found]
+    ordered += [n for n in found if n not in PREFERRED_ORDER]
+    return ordered
+
+
+def _dig(report, path):
+    cur = report
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_gates(name: str, report) -> list:
+    """Failed gated acceptance flags of ``report`` -> list of messages."""
+    if not isinstance(report, dict):
+        return []
+    failures = []
+    for flag_path, gated_path in GATES.get(name, ()):
+        flag = _dig(report, flag_path)
+        if flag is None:        # section absent (e.g. future report reshape)
+            continue
+        gated = True if gated_path is None else bool(_dig(report, gated_path))
+        if gated and not flag:
+            failures.append(f"{name}: gate {flag_path} is false")
+    return failures
 
 
 def _bench_kernels(csv_rows):
@@ -77,27 +160,7 @@ def _bench_kernels(csv_rows):
     timed("rglru_scan[ref]", lambda: ref.rglru_scan_ref(a_, x_))
 
 
-def main() -> None:
-    csv_rows = []
-    t0 = time.time()
-
-    from benchmarks import (bench_engine, bench_fault, bench_models,
-                            bench_privacy, bench_serve, bench_sweep,
-                            bench_table1, bench_table2, bench_table3,
-                            bench_fig3)
-
-    bench_engine.run(csv_rows)
-    bench_sweep.run(csv_rows)
-    bench_privacy.run(csv_rows)
-    bench_fault.run(csv_rows)
-    bench_models.run(csv_rows)
-    bench_serve.run(csv_rows)
-    bench_table1.run(csv_rows)
-    bench_table2.run(csv_rows)
-    bench_fig3.run(csv_rows)
-    bench_table3.run(csv_rows)
-    _bench_kernels(csv_rows)
-
+def _roofline_summary(csv_rows):
     # roofline summary (dry-run artifacts, if the sweep has been run)
     try:
         from benchmarks import roofline
@@ -121,11 +184,82 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         print("roofline summary skipped:", e)
 
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description="run the benchmark suite")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-scale grids: set every REPRO_*_SMOKE=1 before "
+                         "bench modules import")
+    ap.add_argument("--only", default=None, metavar="A,B",
+                    help="comma-separated bench names (see --list)")
+    ap.add_argument("--list", action="store_true", dest="list_only",
+                    help="print discovered benches and exit")
+    ap.add_argument("--profile", nargs="?", const="profiles/bench",
+                    default=None, metavar="LOGDIR",
+                    help="dump a jax.profiler trace of the run "
+                         "(TensorBoard-loadable; default LOGDIR "
+                         "profiles/bench)")
+    args = ap.parse_args(argv)
+
+    benches = discover()
+    if args.list_only:
+        for n in benches:
+            gates = ", ".join(f for f, _ in GATES.get(n, ())) or "-"
+            print(f"{n:10s} gates: {gates}")
+        return 0
+
+    if args.only:
+        wanted = [w.strip() for w in args.only.split(",") if w.strip()]
+        unknown = sorted(set(wanted) - set(benches))
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; known: {benches}")
+        benches = [n for n in benches if n in wanted]
+
+    # smoke vars must be in the environment before the bench modules import:
+    # every bench_*.py sizes its grid at module scope.
+    if args.smoke:
+        for var in SMOKE_VARS:
+            os.environ[var] = "1"
+
+    if args.profile:
+        from repro.obs import profile_trace
+        prof = profile_trace(args.profile)
+    else:
+        prof = contextlib.nullcontext()
+
+    csv_rows = []
+    failures = []
+    t0 = time.time()
+    with prof:
+        for name in benches:
+            try:
+                mod = importlib.import_module(f"benchmarks.bench_{name}")
+                report = mod.run(csv_rows)
+            except Exception:  # noqa: BLE001 — keep the rest of the suite alive
+                traceback.print_exc()
+                failures.append(f"{name}: raised (see traceback above)")
+                continue
+            failures.extend(check_gates(name, report))
+        _bench_kernels(csv_rows)
+        _roofline_summary(csv_rows)
+    if args.profile:
+        print(f"\nprofiler trace -> {args.profile} "
+              f"(tensorboard --logdir {args.profile})")
+
     print(f"\ntotal benchmark time: {time.time() - t0:.1f}s")
     print("\nname,us_per_call,derived")
     for name, us, derived in csv_rows:
         print(f"{name},{us:.3f},{derived}")
 
+    if failures:
+        print("\nFAILED benches/gates:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nall benches and gates passed")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -242,12 +242,16 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
                                      (n_clients,)).astype(jnp.float32)
 
         # ---- ComputeUtility + SelectTopK (line 4) ----
-        utility = sel_lib.compute_utility(state.util, fl,
-                                          fault_w=pr.fault_util_w)
-        k_eff = (state.kctl.k if fl.adaptive_k
-                 else jnp.asarray(float(fl.clients_per_round), jnp.float32))
-        sel_mask = strategy(k_sel, state.util, utility, avail, k_eff, k_max,
-                            pr.explore_noise)
+        # jax.named_scope markers are metadata-only (profiler/HLO names);
+        # they never change the lowered math (docs/DESIGN.md §8)
+        with jax.named_scope("selection"):
+            utility = sel_lib.compute_utility(state.util, fl,
+                                              fault_w=pr.fault_util_w)
+            k_eff = (state.kctl.k if fl.adaptive_k
+                     else jnp.asarray(float(fl.clients_per_round),
+                                      jnp.float32))
+            sel_mask = strategy(k_sel, state.util, utility, avail, k_eff,
+                                k_max, pr.explore_noise)
 
         # ---- failure injection + checkpoint-recovery truncation ----
         # process-emitted failure times (repro/fault): the runtime
@@ -261,37 +265,41 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         )
 
         # ---- local training, in parallel over clients (line 5) ----
-        deltas, pre_loss, post_loss = jax.vmap(
-            local_train, in_axes=(None, 0, 0, None)
-        )(state.params, batches, eff_steps, pr.local_lr)
-        if delta_constraint is not None:
-            deltas = delta_constraint(deltas)
+        with jax.named_scope("local_train"):
+            deltas, pre_loss, post_loss = jax.vmap(
+                local_train, in_axes=(None, 0, 0, None)
+            )(state.params, batches, eff_steps, pr.local_lr)
+            if delta_constraint is not None:
+                deltas = delta_constraint(deltas)
 
         # ---- DP: noise on updates, not on scores (lines 8-9) ----
-        if fl.dp_enabled:
-            sigma = _dp_sigma(fl, pr)
-            keys = jax.random.split(k_dp, n_clients)
+        with jax.named_scope("dp_privatize"):
+            if fl.dp_enabled:
+                sigma = _dp_sigma(fl, pr)
+                keys = jax.random.split(k_dp, n_clients)
 
-            def privatize(d, k):
-                return dp_lib.privatize_update(
-                    d, k, mode=fl.dp_mode, clip=pr.dp_clip, sigma=sigma,
-                    use_kernel=dp_use_kernel,
-                )
+                def privatize(d, k):
+                    return dp_lib.privatize_update(
+                        d, k, mode=fl.dp_mode, clip=pr.dp_clip, sigma=sigma,
+                        use_kernel=dp_use_kernel,
+                    )
 
-            deltas, norms = jax.vmap(privatize)(deltas, keys)
-        else:
-            norms = jax.vmap(dp_lib.global_norm)(deltas)
+                deltas, norms = jax.vmap(privatize)(deltas, keys)
+            else:
+                norms = jax.vmap(dp_lib.global_norm)(deltas)
 
         # drop clients whose surviving work is zero
         contrib_mask = sel_mask * (eff_steps > 0)
 
         # ---- aggregation + server update (line 18) ----
-        agg_delta = agg.aggregate_stacked(deltas, contrib_mask, state.util.data_size)
-        new_params, new_server_state = agg.apply_server_update(
-            server, state.params, state.server_opt_state, agg_delta
-        )
-        new_params, new_server_state = _gate_server_update(
-            update_gate, new_params, new_server_state, state)
+        with jax.named_scope("aggregate"):
+            agg_delta = agg.aggregate_stacked(deltas, contrib_mask,
+                                              state.util.data_size)
+            new_params, new_server_state = agg.apply_server_update(
+                server, state.params, state.server_opt_state, agg_delta
+            )
+            new_params, new_server_state = _gate_server_update(
+                update_gate, new_params, new_server_state, state)
 
         # ---- update-coherence (data-quality observable): cos(Δ_i, Δ_agg) ----
         def _dot(a, b):

@@ -247,21 +247,24 @@ def cohort_topk(scores: jnp.ndarray, avail: jnp.ndarray, k_eff, k_max: int,
     candidate list is ordered chunk-major then index-major, which is
     exactly global index order among equal values.
     """
-    neg = jnp.finfo(jnp.float32).min
-    masked = jnp.where(avail > 0, scores, neg)
-    n = masked.shape[0]
-    chunks = int(chunks)
-    if chunks > 1 and n % chunks == 0 and n // chunks >= k_max:
-        per = n // chunks
-        v, i = jax.lax.top_k(masked.reshape(chunks, per), k_max)
-        i = i + (jnp.arange(chunks, dtype=i.dtype) * per)[:, None]
-        vals, j = jax.lax.top_k(v.reshape(-1), k_max)
-        idx = i.reshape(-1)[j]
-    else:
-        vals, idx = jax.lax.top_k(masked, k_max)
-    ranks = jnp.arange(k_max)
-    take = (ranks < k_eff).astype(jnp.float32) * (vals > neg)
-    return idx.astype(jnp.int32), take
+    # metadata-only profiler marker (docs/DESIGN.md §8) — the population
+    # engine's selection phase shows up named in TensorBoard traces
+    with jax.named_scope("cohort_topk"):
+        neg = jnp.finfo(jnp.float32).min
+        masked = jnp.where(avail > 0, scores, neg)
+        n = masked.shape[0]
+        chunks = int(chunks)
+        if chunks > 1 and n % chunks == 0 and n // chunks >= k_max:
+            per = n // chunks
+            v, i = jax.lax.top_k(masked.reshape(chunks, per), k_max)
+            i = i + (jnp.arange(chunks, dtype=i.dtype) * per)[:, None]
+            vals, j = jax.lax.top_k(v.reshape(-1), k_max)
+            idx = i.reshape(-1)[j]
+        else:
+            vals, idx = jax.lax.top_k(masked, k_max)
+        ranks = jnp.arange(k_max)
+        take = (ranks < k_eff).astype(jnp.float32) * (vals > neg)
+        return idx.astype(jnp.int32), take
 
 
 def cohort_topk_host(scores, avail, k_eff: float, k_max: int):

@@ -14,6 +14,7 @@ them into its static buckets (ARCHITECTURE.md §Serving).
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 
 import numpy as np
@@ -21,6 +22,7 @@ import numpy as np
 from repro.configs.base import FLConfig
 from repro.data.synthetic import make_federated
 from repro.models.spec import meta_for
+from repro.obs import profile_trace
 from repro.serve.engine import ServeEngine, save_serving_checkpoint
 from repro.train.fl_driver import run_fl
 
@@ -65,6 +67,11 @@ def main(argv=None):
     ap.add_argument("--client", type=int, default=None,
                     help="score with this client's personalized params")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--profile", nargs="?", const="profiles/serve",
+                    default=None, metavar="LOGDIR",
+                    help="dump a TensorBoard-loadable jax.profiler trace "
+                         "of the scoring stream to LOGDIR "
+                         "(default profiles/serve)")
     args = ap.parse_args(argv)
     if args.ckpt is None:
         args.ckpt = f"ckpt/serve_{args.model}_{args.dataset}"
@@ -88,7 +95,13 @@ def main(argv=None):
             for i in range(0, windows.shape[0], args.chunk):
                 yield windows[i:i + args.chunk]
 
-    report = eng.score_stream(stream(), client=args.client)
+    prof = (profile_trace(args.profile) if args.profile
+            else contextlib.nullcontext())
+    with prof:
+        report = eng.score_stream(stream(), client=args.client)
+    if args.profile:
+        print(f"profiler trace written to {args.profile} "
+              f"(load with: tensorboard --logdir {args.profile})")
     print(f"model={eng.spec.name} route={eng.route} buckets={eng.buckets} "
           f"ckpt={npz}")
     print(f"scored {report.n_windows} windows in {report.n_batches} batches: "

@@ -45,14 +45,17 @@ import numpy as np
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.kernels.ops import default_route
 from repro.models.spec import DataMeta, ModelSpec, get_model_spec
+from repro.obs import stats as obs_stats
+from repro.obs import trace as obs_trace
 from repro.serve import batching, feed
 
 # Compiled per-(model, DataMeta, bucket, route) scorers.  Keyed on the spec
 # NAME (registry builders are deterministic in the DataMeta), so two engines
 # serving the same architecture share one program — the single-compile
-# property benchmarks/bench_serve.py asserts via SERVE_STATS.
+# property benchmarks/bench_serve.py asserts via SERVE_STATS.  The counters
+# are a view of the unified registry ("serve" namespace, repro.obs.stats).
 _SCORER_CACHE: Dict = {}
-SERVE_STATS = {"misses": 0, "hits": 0}
+SERVE_STATS = obs_stats.STATS.counters("serve", misses=0, hits=0)
 
 
 def _get_scorer(spec: ModelSpec, meta: DataMeta, bucket: int,
@@ -65,6 +68,9 @@ def _get_scorer(spec: ModelSpec, meta: DataMeta, bucket: int,
     scorer = _SCORER_CACHE.get(cache_key)
     if scorer is None:
         SERVE_STATS["misses"] += 1
+        obs_trace.event("compile.scorer_miss", model=spec.name,
+                        bucket=int(bucket), route=route,
+                        cache_size=len(_SCORER_CACHE))
         logits_fn = spec.logits_routed(route)
 
         def score(params, x):
@@ -178,33 +184,38 @@ class ServeEngine:
         scoring) and collect scores + timing."""
         params = self.params_for(client)
         batches = batching.batches_of(stream, self.buckets)
-        t0 = time.perf_counter()
-        t_prev = t0
-        pending: Optional[Tuple[jax.Array, int]] = None
-        scores: List[np.ndarray] = []
-        walls: List[float] = []
-        sizes: List[int] = []
+        with obs_trace.span("serve.score_stream", model=self.spec.name,
+                            route=self.route):
+            t0 = time.perf_counter()
+            t_prev = t0
+            pending: Optional[Tuple[jax.Array, int]] = None
+            scores: List[np.ndarray] = []
+            walls: List[float] = []
+            sizes: List[int] = []
 
-        def _drain(entry, t_prev):
-            res, n_valid = entry
-            res.block_until_ready()
-            t_now = time.perf_counter()
-            scores.append(np.asarray(res)[:n_valid])
-            walls.append(t_now - t_prev)
-            sizes.append(n_valid)
-            return t_now
+            def _drain(entry, t_prev):
+                res, n_valid = entry
+                res.block_until_ready()
+                t_now = time.perf_counter()
+                scores.append(np.asarray(res)[:n_valid])
+                walls.append(t_now - t_prev)
+                sizes.append(n_valid)
+                return t_now
 
-        for xb, n_valid in feed.device_feed(batches, sharding):
-            scorer = _get_scorer(self.spec, self.meta, xb.shape[0],
-                                 self.route)
-            res = scorer(params, xb)            # async dispatch of batch N
+            for xb, n_valid in feed.device_feed(batches, sharding):
+                with obs_trace.span("serve.dispatch",
+                                    bucket=int(xb.shape[0])):
+                    scorer = _get_scorer(self.spec, self.meta, xb.shape[0],
+                                         self.route)
+                    res = scorer(params, xb)    # async dispatch of batch N
+                if pending is not None:
+                    # block on batch N-1 only
+                    t_prev = _drain(pending, t_prev)
+                pending = (res, n_valid)
             if pending is not None:
-                t_prev = _drain(pending, t_prev)  # block on batch N-1 only
-            pending = (res, n_valid)
-        if pending is not None:
-            _drain(pending, t_prev)
+                _drain(pending, t_prev)
 
-        wall = time.perf_counter() - t0
+            wall = time.perf_counter() - t0
         out = (np.concatenate(scores) if scores
                else np.zeros((0,), np.float32))
         return StreamReport(scores=out, n_windows=int(out.shape[0]),

@@ -82,6 +82,8 @@ from repro.data.synthetic import (FederatedData, Population,
                                   sample_round_batches, stack_federation)
 from repro.launch.mesh import make_scale_mesh
 from repro.models import sharding as shard_lib
+from repro.obs import stats as obs_stats
+from repro.obs import trace as obs_trace
 from repro.models.mlp import auc_roc, auc_roc_jnp
 from repro.models.spec import DataMeta, ModelSpec, get_model_spec, meta_for
 from repro.privacy import accountant as acct_lib
@@ -377,9 +379,12 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
             else:
                 state, _, cum_time = carry
                 losses, ks, fails = ys
-            acc = spec.accuracy(state.params, tx, ty)
-            proba = spec.predict_proba(state.params, tx)[:, 1]
-            auc = auc_roc_jnp(proba, ty)
+            # metadata-only phase marker: tags the eval ops in profiler
+            # traces / HLO names without touching the lowered math
+            with jax.named_scope("eval_block"):
+                acc = spec.accuracy(state.params, tx, ty)
+                proba = spec.predict_proba(state.params, tx)[:, 1]
+                auc = auc_roc_jnp(proba, ty)
             trace = {
                 "loss": losses[-1],
                 "acc": acc,
@@ -435,7 +440,10 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
 # compiles once per model.  RUNNER_STATS counts misses/hits so tests and
 # benchmarks can assert the single-compile property.
 _RUNNER_CACHE: Dict = {}
-RUNNER_STATS = {"misses": 0, "hits": 0}
+# A view of the unified registry (repro.obs.stats) — dict-style call sites
+# (index, +=, dict(...)) work unchanged; STATS.snapshot()/reset()/expect()
+# see it as the "runner" namespace.
+RUNNER_STATS = obs_stats.STATS.counters("runner", misses=0, hits=0)
 
 # Device-side federations cached per host FederatedData object, so repeat
 # calls (seed loops, epsilon sweeps) skip the O(n_clients × max_n × d)
@@ -474,12 +482,17 @@ def _get_runner(fl: FLConfig, rounds: int, eval_every: int, meta: DataMeta,
     runner = _RUNNER_CACHE.get(cache_key)
     if runner is None:
         RUNNER_STATS["misses"] += 1
-        single_run = _build_single_run(static, rounds, eval_every, meta)
-        donate = () if jax.default_backend() == "cpu" else (0, 4)
-        runner = jax.jit(
-            jax.vmap(single_run, in_axes=(0, None, None, None, 0)),
-            donate_argnums=donate,
-        )
+        obs_trace.event("compile.runner_miss", engine="sweep",
+                        model=static.model, rounds=rounds,
+                        n_lanes=n_lanes, cache_size=len(_RUNNER_CACHE))
+        with obs_trace.span("runner.build", engine="sweep",
+                            model=static.model):
+            single_run = _build_single_run(static, rounds, eval_every, meta)
+            donate = () if jax.default_backend() == "cpu" else (0, 4)
+            runner = jax.jit(
+                jax.vmap(single_run, in_axes=(0, None, None, None, 0)),
+                donate_argnums=donate,
+            )
         _RUNNER_CACHE[cache_key] = runner
     else:
         RUNNER_STATS["hits"] += 1
@@ -578,35 +591,40 @@ def run_fl_sweep(
         n_padded = -(-n_lanes // sharding[0]) * sharding[0]
 
     t0 = time.time()
-    meta = meta_for(fed, hidden=hidden)
-    stack, data_size, data_quality = _device_federation(fed)
-    runner = _get_runner(fl, rounds, eval_every, meta, n_padded, stack)
-    keys = jax.vmap(jax.random.key)(
-        jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
-    lanes = _params_lanes(cells, len(seeds))
-    if n_padded > n_lanes:
-        pad = n_padded - n_lanes
-        keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, axis=0)])
-        lanes = jax.tree.map(
-            lambda x: jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)]),
-            lanes)
+    with obs_trace.span("sweep.prepare", method=method, n_lanes=n_lanes,
+                        n_cells=len(cells), rounds=rounds):
+        meta = meta_for(fed, hidden=hidden)
+        stack, data_size, data_quality = _device_federation(fed)
+        runner = _get_runner(fl, rounds, eval_every, meta, n_padded, stack)
+        keys = jax.vmap(jax.random.key)(
+            jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
+        lanes = _params_lanes(cells, len(seeds))
+        if n_padded > n_lanes:
+            pad = n_padded - n_lanes
+            keys = jnp.concatenate([keys, jnp.repeat(keys[-1:], pad, axis=0)])
+            lanes = jax.tree.map(
+                lambda x: jnp.concatenate(
+                    [x, jnp.repeat(x[-1:], pad, axis=0)]),
+                lanes)
 
-    if sharding is not None:
-        _, s_lane, s_rep = sharding
-        keys = jax.device_put(keys, s_lane)
-        lanes = jax.tree.map(lambda x: jax.device_put(x, s_lane), lanes)
-        stack, data_size, data_quality = jax.tree.map(
-            lambda x: jax.device_put(x, s_rep),
-            (stack, data_size, data_quality))
+        if sharding is not None:
+            _, s_lane, s_rep = sharding
+            keys = jax.device_put(keys, s_lane)
+            lanes = jax.tree.map(lambda x: jax.device_put(x, s_lane), lanes)
+            stack, data_size, data_quality = jax.tree.map(
+                lambda x: jax.device_put(x, s_rep),
+                (stack, data_size, data_quality))
 
-    params_b, sim_b, trace_b = runner(keys, stack, data_size, data_quality,
-                                      lanes)
-    jax.block_until_ready(sim_b)
+    with obs_trace.span("sweep.execute", n_lanes=n_lanes):
+        params_b, sim_b, trace_b = runner(keys, stack, data_size,
+                                          data_quality, lanes)
+        jax.block_until_ready(sim_b)
     wall_per_lane = (time.time() - t0) / max(n_lanes, 1)
 
     eval_idx = _eval_rounds(rounds, eval_every)
-    trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
-    sim_np = np.asarray(sim_b)
+    with obs_trace.span("sweep.readback", n_lanes=n_lanes):
+        trace_np = {k: np.asarray(v) for k, v in trace_b.items()}
+        sim_np = np.asarray(sim_b)
     # one spec for every lane (model is static) — rebuilding per lane would
     # defeat _personalize's jit cache for closure-built specs
     spec = get_model_spec(fl.model, meta) if method == "fedl2p" else None
@@ -780,9 +798,12 @@ def _build_population_run(fl: FLConfig, rounds: int, eval_every: int,
             else:
                 state, _, cum_time = carry
                 losses, ks, fails = ys
-            acc = spec.accuracy(state.params, tx, ty)
-            proba = spec.predict_proba(state.params, tx)[:, 1]
-            auc = auc_roc_jnp(proba, ty)
+            # metadata-only phase marker: tags the eval ops in profiler
+            # traces / HLO names without touching the lowered math
+            with jax.named_scope("eval_block"):
+                acc = spec.accuracy(state.params, tx, ty)
+                proba = spec.predict_proba(state.params, tx)[:, 1]
+                auc = auc_roc_jnp(proba, ty)
             trace = {
                 "loss": losses[-1],
                 "acc": acc,
@@ -846,13 +867,18 @@ def _get_population_runner(fl: FLConfig, rounds: int, eval_every: int,
     runner = _RUNNER_CACHE.get(cache_key)
     if runner is None:
         RUNNER_STATS["misses"] += 1
-        single_run = _build_population_run(static, rounds, eval_every, meta,
-                                           int(sel_chunks))
-        donate = () if jax.default_backend() == "cpu" else (0, 2)
-        runner = jax.jit(
-            jax.vmap(single_run, in_axes=(0, None, 0)),
-            donate_argnums=donate,
-        )
+        obs_trace.event("compile.runner_miss", engine="population",
+                        model=static.model, rounds=rounds,
+                        n_lanes=n_lanes, cache_size=len(_RUNNER_CACHE))
+        with obs_trace.span("runner.build", engine="population",
+                            model=static.model):
+            single_run = _build_population_run(static, rounds, eval_every,
+                                               meta, int(sel_chunks))
+            donate = () if jax.default_backend() == "cpu" else (0, 2)
+            runner = jax.jit(
+                jax.vmap(single_run, in_axes=(0, None, 0)),
+                donate_argnums=donate,
+            )
         _RUNNER_CACHE[cache_key] = runner
     else:
         RUNNER_STATS["hits"] += 1

@@ -1,0 +1,185 @@
+#!/usr/bin/env python
+"""CI regression gate over the experiment store (docs/DESIGN.md §8).
+
+Compares the LATEST stored run's cells against that lane's history in the
+store (same bench, lane_key, ENGINE_REV, statics_key — the indexed lookup)
+and fails CI when:
+
+* **warm wall regressed** — the current cell's min-of-N warm walls are
+  stochastically greater than the pooled history walls by a one-sided
+  Mann-Whitney U at ``--alpha`` (src/repro/stats.py, the same helper the
+  paper-metric gates use), AND the min-of-N ratio exceeds
+  ``--wall-ratio`` (both tests must agree: MW alone would flag a
+  consistent +1 % drift, the ratio alone would flag one noisy run);
+* **gated metric regressed** — a metric stored with direction ``+1``
+  (higher-better, e.g. AUC) fell below, or ``-1`` (lower-better) rose
+  above, the history median by more than ``--metric-rtol`` relative.
+
+Statistics of "needs ≥2 stored runs before it can fail": with N warm
+walls per cell the one-sided exact MW minimum p is ``1/C(2N, N)`` — for
+the common N=3 that is 1/20 = 0.05, which is NOT < 0.05, so a single
+history run can never fire at the default alpha.  Two pooled history
+runs (≥6 samples vs 3) give min p = 1/84.  ``--min-history-runs``
+(default 2) makes that guard explicit: lanes with thinner history report
+``insufficient history`` and pass.
+
+Usage:
+  python tools/bench_regress.py [--store PATH] [--run-id N]
+      [--alpha 0.05] [--wall-ratio 1.25] [--metric-rtol 0.05]
+      [--min-history-runs 2] [--bench NAME]
+
+Exit codes: 0 = no regression (incl. empty store / insufficient
+history), 1 = regression detected, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs.store import ExperimentStore, default_store_path  # noqa: E402
+from repro.stats import mannwhitney_greater  # noqa: E402
+
+
+def _median(xs):
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def check_cell(cell, history, *, alpha=0.05, wall_ratio=1.25,
+               metric_rtol=0.05, min_history_runs=2):
+    """Gate one current cell against its history cells.
+
+    Returns ``(verdicts, regressions)`` — ``verdicts`` is a list of
+    human-readable lines, ``regressions`` the subset that fail the gate.
+    """
+    verdicts, regressions = [], []
+    lane = f"{cell['bench']}/{cell['lane_key']}"
+    hist_runs = sorted({c["run_id"] for c in history})
+    if len(hist_runs) < min_history_runs:
+        verdicts.append(
+            f"PASS {lane}: insufficient history "
+            f"({len(hist_runs)} run(s) < {min_history_runs}) — gate idle")
+        return verdicts, regressions
+
+    # -- warm wall ---------------------------------------------------------
+    cur_walls = cell.get("warm_walls") or []
+    hist_walls = [w for c in history for w in (c.get("warm_walls") or [])]
+    if cur_walls and hist_walls:
+        ratio = min(cur_walls) / min(hist_walls)
+        u, p, sig = mannwhitney_greater(cur_walls, hist_walls, alpha=alpha)
+        if sig and ratio > wall_ratio:
+            line = (f"FAIL {lane}: warm wall regressed — min-of-N ratio "
+                    f"{ratio:.2f}x (> {wall_ratio}), MW U={u:.1f} "
+                    f"p={p:.4f} (< {alpha})")
+            regressions.append(line)
+            verdicts.append(line)
+        else:
+            verdicts.append(
+                f"PASS {lane}: warm wall ok (ratio {ratio:.2f}x, "
+                f"MW p={p:.4f}, n={len(cur_walls)} vs "
+                f"{len(hist_walls)} pooled)")
+
+    # -- gated metrics -----------------------------------------------------
+    for name, m in sorted((cell.get("metrics") or {}).items()):
+        direction = m.get("direction", 0)
+        if direction == 0 or m.get("value") is None:
+            continue
+        hist_vals = []
+        for c in history:
+            hm = (c.get("metrics") or {}).get(name)
+            if hm and hm.get("value") is not None:
+                hist_vals.append(hm["value"])
+        if not hist_vals:
+            verdicts.append(f"PASS {lane}.{name}: no history values")
+            continue
+        cur, med = m["value"], _median(hist_vals)
+        tol = metric_rtol * max(abs(med), 1e-12)
+        worse = ((direction > 0 and cur < med - tol)
+                 or (direction < 0 and cur > med + tol))
+        arrow = "higher-better" if direction > 0 else "lower-better"
+        if worse:
+            line = (f"FAIL {lane}.{name}: gated metric regressed "
+                    f"({arrow}) — {cur:.6g} vs history median {med:.6g} "
+                    f"(rtol {metric_rtol})")
+            regressions.append(line)
+            verdicts.append(line)
+        else:
+            verdicts.append(
+                f"PASS {lane}.{name}: {cur:.6g} vs median {med:.6g} "
+                f"({arrow}, rtol {metric_rtol})")
+    return verdicts, regressions
+
+
+def check_store(store, *, run_id=None, bench=None, alpha=0.05,
+                wall_ratio=1.25, metric_rtol=0.05, min_history_runs=2):
+    """Gate every cell of ``run_id`` (default: latest run) against its
+    per-lane history.  Returns ``(verdicts, regressions)``."""
+    if run_id is None:
+        run_id = store.latest_run_id()
+    if run_id is None:
+        return (["PASS: store is empty — nothing to gate"], [])
+    cells = store.cells_of_run(run_id)
+    if bench is not None:
+        cells = [c for c in cells if c["bench"] == bench]
+    if not cells:
+        return ([f"PASS: run {run_id} recorded no matching cells"], [])
+    verdicts, regressions = [], []
+    for cell in cells:
+        history = store.history(
+            cell["bench"], cell["lane_key"],
+            engine_rev=cell.get("engine_rev"),
+            statics_key=cell.get("statics_key"),
+            before_run=run_id)
+        v, r = check_cell(cell, history, alpha=alpha, wall_ratio=wall_ratio,
+                          metric_rtol=metric_rtol,
+                          min_history_runs=min_history_runs)
+        verdicts.extend(v)
+        regressions.extend(r)
+    return verdicts, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--store", default=None,
+                    help="store path (default: REPRO_STORE env or "
+                         "benchmarks/artifacts/experiments.sqlite)")
+    ap.add_argument("--run-id", type=int, default=None,
+                    help="run to gate (default: latest)")
+    ap.add_argument("--bench", default=None,
+                    help="restrict to one bench name")
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--wall-ratio", type=float, default=1.25,
+                    help="min-of-N warm-wall ratio that must ALSO be "
+                         "exceeded before a wall regression fires")
+    ap.add_argument("--metric-rtol", type=float, default=0.05)
+    ap.add_argument("--min-history-runs", type=int, default=2,
+                    help="history runs required before the gate can fail "
+                         "(see module docstring for the MW power argument)")
+    args = ap.parse_args(argv)
+
+    path = args.store or default_store_path()
+    if not os.path.exists(path):
+        print(f"PASS: no store at {path} — nothing to gate")
+        return 0
+    store = ExperimentStore(path)
+    try:
+        verdicts, regressions = check_store(
+            store, run_id=args.run_id, bench=args.bench, alpha=args.alpha,
+            wall_ratio=args.wall_ratio, metric_rtol=args.metric_rtol,
+            min_history_runs=args.min_history_runs)
+    finally:
+        store.close()
+    for line in verdicts:
+        print(line)
+    print(f"{len(regressions)} regression(s) across "
+          f"{len(verdicts)} check(s)")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

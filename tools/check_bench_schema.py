@@ -1,0 +1,227 @@
+#!/usr/bin/env python
+"""Schema-validate the seven legacy ``BENCH_*.json`` artifacts.
+
+The JSON snapshots are the benches' compatibility surface: docs cite their
+numbers and tools/bench_regress.py's legacy import path reads their gate
+fields.  A refactor that silently drops a gate flag (``gated``,
+``pass_under_2x``, ``runner_compiles``...) would leave a stale artifact
+that still LOOKS healthy.  This checker pins, per bench, the dotted paths
+that must exist and their types — run in tier-1 CI.
+
+Schema language: ``{"dotted.path": type_spec}`` where a ``[]`` segment
+means "every element of this list".  ``type_spec`` is a Python type, a
+tuple of types, or the string "number" (int or float — JSON does not
+distinguish).  Missing path or wrong type → failure.
+
+Usage: python tools/check_bench_schema.py [--root DIR]
+Exit 0 when every present artifact validates; a missing file is reported
+but only fails with --require-all (artifacts are build products, not
+source).  Exit 1 on any validation failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+NUM = "number"
+
+SCHEMAS = {
+    "BENCH_engine.json": {
+        "config.n_clients": int,
+        "config.rounds": int,
+        "config.seeds[]": int,
+        "legacy_single.wall_s": NUM,
+        "batch.wall_s_cold": NUM,
+        "batch.execute_s_min_of_3": NUM,
+        "batch.execute_s_all[]": NUM,
+        "batch.wall_s_warm": NUM,
+        "speedup.warm_batch_vs_legacy_per_seed_round": NUM,
+        "acceptance.ratio": NUM,
+        "acceptance.pass_under_2x": bool,
+        "equivalence.acc_abs_diff": NUM,
+        "equivalence.eps_abs_diff": NUM,
+    },
+    "BENCH_sweep.json": {
+        "mode": str,
+        "config.n_lanes": int,
+        "percell.wall_s_cold": NUM,
+        "percell_shared.execute_s_min_of_3": NUM,
+        "sweep.execute_s_min_of_3": NUM,
+        "sweep.execute_s_all[]": NUM,
+        "sweep.runner_compiles": int,
+        "equivalence.max_abs_acc_diff": NUM,
+        "equivalence.eps_exact": bool,
+        "acceptance.ratio": NUM,
+        "acceptance.pass_warm_not_slower": bool,
+        "acceptance.gated": bool,
+    },
+    "BENCH_models.json": {
+        "mode": str,
+        "config.warm_n": int,
+        "grid[].dataset": str,
+        "grid[].model": str,
+        "grid[].auc_mean": NUM,
+        "grid[].warm_execute_s_min": NUM,
+        "grid[].warm_execute_s_all[]": NUM,
+        "grid[].runner_compiles": int,
+        "road_raw_auc.window_native_matches_or_beats_mlp": bool,
+        "road_raw_auc.gated": bool,
+    },
+    "BENCH_privacy.json": {
+        "mode": str,
+        "config.budgets[]": NUM,
+        "frontier.runner_compiles": int,
+        "frontier.cells[].budget": NUM,
+        "frontier.cells[].auc_mean": NUM,
+        "frontier.cells[].eps_spent_mean": NUM,
+        "overhead.baseline_execute_s_min": NUM,
+        "overhead.scheduled_execute_s_min": NUM,
+        "overhead.ratio": NUM,
+        "overhead.pass_within_5pct": bool,
+        "overhead.gated": bool,
+        "offline_check.rel_err": NUM,
+    },
+    "BENCH_fault.json": {
+        "mode": str,
+        "config.n_lanes": int,
+        "frontier.warm_execute_s_min": NUM,
+        "frontier.warm_execute_s_all[]": NUM,
+        "frontier.runner_compiles": int,
+        "frontier.cells[].process": str,
+        "frontier.cells[].rate": NUM,
+        "frontier.cells[].auc_mean": NUM,
+        "coupling_gate.mannwhitney_u": NUM,
+        "coupling_gate.p_value": NUM,
+        "coupling_gate.gated": bool,
+        "ft_ablation.p_value": NUM,
+        "ft_ablation.gated": bool,
+    },
+    "BENCH_scale.json": {
+        "engine_rev": str,
+        "smoke": bool,
+        "rounds": int,
+        "k_max": int,
+        "populations[].n_clients": int,
+        "populations[].cold_s": NUM,
+        "populations[].warm_s": NUM,
+        "populations[].warm_walls_s[]": NUM,
+        "runner_stats.misses": int,
+        "sublinear.pop_ratio": NUM,
+        "sublinear.wall_ratio": NUM,
+        "sublinear.ok": bool,
+        "memory.n_clients": int,
+    },
+    "BENCH_serve.json": {
+        "mode": str,
+        "config.warm_n": int,
+        "grid[].dataset": str,
+        "grid[].model": str,
+        "grid[].bucket": int,
+        "grid[].windows_per_sec": NUM,
+        "grid[].p50_ms": NUM,
+        "grid[].p99_ms": NUM,
+        "grid[].scorer_compiles": int,
+        "naive_baseline[].speedup_vs_naive": NUM,
+        "naive_baseline[].gate_5x": bool,
+        "gate.required_speedup": NUM,
+        "gate.all_models_pass": bool,
+        "gate.gated": bool,
+    },
+}
+
+
+def _type_ok(value, spec) -> bool:
+    if spec is NUM:
+        return isinstance(value, (int, float)) and not isinstance(value, bool)
+    if spec is bool:
+        return isinstance(value, bool)
+    if spec is int:
+        return isinstance(value, int) and not isinstance(value, bool)
+    return isinstance(value, spec)
+
+
+def _check_path(obj, segs, spec, where, errors):
+    if not segs:
+        if not _type_ok(obj, spec):
+            want = spec if isinstance(spec, str) else spec.__name__
+            errors.append(f"{where}: expected {want}, "
+                          f"got {type(obj).__name__} ({obj!r})")
+        return
+    seg, rest = segs[0], segs[1:]
+    if seg.endswith("[]"):
+        key = seg[:-2]
+        if key:
+            if not isinstance(obj, dict) or key not in obj:
+                errors.append(f"{where}.{key}: missing")
+                return
+            obj = obj[key]
+            where = f"{where}.{key}"
+        if not isinstance(obj, list):
+            errors.append(f"{where}: expected list, got {type(obj).__name__}")
+            return
+        if not obj:
+            errors.append(f"{where}: empty list")
+            return
+        for i, item in enumerate(obj):
+            _check_path(item, rest, spec, f"{where}[{i}]", errors)
+        return
+    if not isinstance(obj, dict) or seg not in obj:
+        errors.append(f"{where}.{seg}: missing")
+        return
+    _check_path(obj[seg], rest, spec, f"{where}.{seg}", errors)
+
+
+def check_file(path: str, schema: dict) -> list:
+    """Validate one artifact; returns a list of error strings."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{os.path.basename(path)}: unreadable ({e})"]
+    errors = []
+    name = os.path.basename(path)
+    for dotted, spec in schema.items():
+        segs = []
+        for part in dotted.split("."):
+            segs.append(part)
+        _check_path(doc, segs, spec, name, errors)
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))),
+        help="directory holding the BENCH_*.json files (default: repo root)")
+    ap.add_argument("--require-all", action="store_true",
+                    help="fail when an expected artifact file is absent")
+    args = ap.parse_args(argv)
+
+    failures, checked, missing = [], 0, []
+    for fname, schema in sorted(SCHEMAS.items()):
+        path = os.path.join(args.root, fname)
+        if not os.path.exists(path):
+            missing.append(fname)
+            continue
+        errs = check_file(path, schema)
+        checked += 1
+        if errs:
+            failures.extend(errs)
+            print(f"FAIL {fname}: {len(errs)} problem(s)")
+            for e in errs:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {fname} ({len(schema)} paths)")
+    for fname in missing:
+        print(f"skip {fname} (absent)")
+    if missing and args.require_all:
+        failures.extend(f"{m}: missing" for m in missing)
+    print(f"checked {checked}/{len(SCHEMAS)} artifacts, "
+          f"{len(failures)} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
