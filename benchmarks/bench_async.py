@@ -1,0 +1,262 @@
+"""Execution-plan benchmark (ISSUE 9): the plan frontier + the async gate.
+
+Sections, written to ``BENCH_async.json`` at the repo root:
+
+* ``frontier`` — the full execution-plan frontier: every registered
+  client_parallel-family plan (synchronous flat FedAvg, ``buffered_async``
+  at ≥2 buffer sizes K, two-tier ``hierarchical``) × the two fault lanes
+  where plans separate (bursty Markov outages and stragglers), all as
+  runtime lanes of ONE compiled program — the concrete plan is the
+  ``FLParams.plan_code`` lane the core/plans registry derives, so a mixed
+  sync × async × hier sweep costs exactly one ``_get_runner`` miss (hard
+  assertion, like bench_fault's process frontier).  Warm walls are
+  min-of-N executes (repo timing protocol).
+* ``async_gate`` — the headline claim, gated by the same Mann-Whitney
+  helper Table III and the fault coupling gate use (``repro/stats.py``):
+  under bursty-outage and straggler lanes, ``buffered_async`` accumulates
+  significantly LESS simulated wall time than synchronous
+  ``client_parallel`` (p < 0.05 across seeds, one-sided U test) at
+  equal-or-better AUC (the sync arm's AUC must NOT significantly exceed
+  the async arm's).  Both arms are lanes of one compiled program by
+  construction — the comparison can never be an apples-to-oranges
+  recompile.
+* always-on correctness: on straggler lanes the K-th-arrival time model
+  must beat waiting for the slowest client for every K < cohort; the
+  hierarchical lane's two cheap edge hops must undercut the flat WAN hop.
+
+``REPRO_ASYNC_SMOKE=1`` shrinks the grid and skips the significance
+gate's exit code — the compile-count and plan-semantics assertions stay
+on.  CI runs the smoke lane and uploads the artifact
+(.github/workflows/ci.yml REPRO_ASYNC_SMOKE job); the store write-through
+(``common.record_bench``) makes ``tools/bench_regress.py`` gate the warm
+walls and the AUC direction across runs.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.data.synthetic import make_federated
+from repro.fault import process_code
+from repro.stats import mannwhitney_greater
+from repro.train import fl_driver
+
+from benchmarks import common
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_async.json")
+
+SMOKE = os.environ.get("REPRO_ASYNC_SMOKE", "0") == "1"
+N_CLIENTS = 8 if SMOKE else 24
+N_SAMPLES = 1_200 if SMOKE else 6_000
+ROUNDS = 10 if SMOKE else 50
+SEEDS = (0, 1) if SMOKE else (0, 1, 2, 3)
+EVAL_EVERY = 5 if SMOKE else 10
+WARM_N = 2 if SMOKE else 3
+RATE = 0.3 if SMOKE else 0.4         # failure/straggle probability
+BURST = 6.0                           # markov expected outage length
+SLOW = 8.0                            # straggler stretch factor
+BUFFERS = (2.0,) if SMOKE else (2.0, 4.0)   # K of K-of-cohort aggregation
+STALENESS_POW = 0.5
+# the gate pools both fault lanes over its own (wider) seed set
+GATE_SEEDS = (0, 1) if SMOKE else tuple(range(8))
+GATE_ROUNDS = 10 if SMOKE else 40
+GATE_K = 2.0
+
+FAULT_LANES = (("markov", {"fault_process": process_code("markov"),
+                           "fault_burst": BURST}),
+               ("straggler", {"fault_process": process_code("straggler"),
+                              "straggler_slow": SLOW}))
+
+
+def _bench_config(**kw) -> FLConfig:
+    return FLConfig(
+        n_clients=N_CLIENTS, clients_per_round=max(4, N_CLIENTS // 3),
+        rounds=ROUNDS, local_epochs=5, local_batch=32, local_lr=0.08,
+        fault_tolerance=True, failure_prob=RATE, **kw)
+
+
+def _plan_variants():
+    """(label, runtime-override dict) per client_parallel-family plan."""
+    variants = [("sync", {})]
+    variants += [(f"async_k{int(k)}",
+                  {"plan": "buffered_async", "async_buffer": k,
+                   "async_staleness_pow": STALENESS_POW}) for k in BUFFERS]
+    variants.append(("hier", {"plan": "hierarchical"}))
+    return variants
+
+
+def run(csv_rows: list) -> dict:
+    mode = "smoke" if SMOKE else "full"
+    print(f"\n== Async: execution-plan frontier + wall-time gate ({mode}) ==")
+    fed = make_federated(0, "unsw", n_samples=N_SAMPLES, n_clients=N_CLIENTS)
+    fl = _bench_config()
+    variants = _plan_variants()
+    cells = [{**plan_kw, **fault_kw, "failure_prob": RATE}
+             for _, plan_kw in variants for _, fault_kw in FAULT_LANES]
+    labels = [(pl, fa) for pl, _ in variants for fa, _ in FAULT_LANES]
+
+    # ---- frontier: every (plan × fault lane) as runtime lanes, ONE compile
+    fl_driver._RUNNER_CACHE.clear()
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    sweep, t_cold = common.timed_call(
+        lambda: fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS,
+                                       rounds=ROUNDS, eval_every=EVAL_EVERY),
+        label="async.frontier_cold")
+    misses = fl_driver.RUNNER_STATS["misses"] - m0
+    assert misses == 1, (
+        f"the whole (plan x fault x K x seed) frontier must compile exactly "
+        f"one runner — the registry maps same-family plans onto one static "
+        f"program — got {misses}")
+
+    def warm():
+        fl_driver.run_fl_sweep(fed, fl, cells, seeds=SEEDS, rounds=ROUNDS,
+                               eval_every=EVAL_EVERY)
+
+    t_warm, warm_walls = common.warm_min(warm, WARM_N)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 == 1, \
+        "warm frontier reruns must be pure cache hits"
+
+    frontier = []
+    by_lane = {}
+    for (plan_label, fault_label), row in zip(labels, sweep):
+        entry = {
+            "plan": plan_label,
+            "fault": fault_label,
+            "acc_mean": float(np.mean([r.accuracy for r in row])),
+            "auc_mean": float(np.mean([r.auc for r in row])),
+            "sim_time_mean": float(np.mean([r.sim_time_s for r in row])),
+        }
+        frontier.append(entry)
+        by_lane[(plan_label, fault_label)] = entry
+
+    # plan-semantics assertions on the straggler lane
+    sync_t = by_lane[("sync", "straggler")]["sim_time_mean"]
+    for k in BUFFERS:
+        assert by_lane[(f"async_k{int(k)}", "straggler")]["sim_time_mean"] \
+            < sync_t, (
+            f"K={k:.0f}-th arrival must undercut waiting for the slowest "
+            "straggler")
+    assert by_lane[("hier", "straggler")]["sim_time_mean"] < sync_t, \
+        "two edge hops at hier_comm_frac each must undercut the flat WAN hop"
+
+    # ---- async gate: buffered_async vs sync, pooled fault lanes ----------
+    # Both arms (and both fault lanes) are runtime lanes of ONE program.
+    gate_cells = [{**fault_kw, "failure_prob": RATE, **arm_kw}
+                  for _, fault_kw in FAULT_LANES
+                  for arm_kw in ({}, {"plan": "buffered_async",
+                                      "async_buffer": GATE_K,
+                                      "async_staleness_pow": STALENESS_POW})]
+    mg = fl_driver.RUNNER_STATS["misses"]
+    gate_sweep = fl_driver.run_fl_sweep(fed, fl, gate_cells, seeds=GATE_SEEDS,
+                                        rounds=GATE_ROUNDS,
+                                        eval_every=EVAL_EVERY)
+    assert fl_driver.RUNNER_STATS["misses"] - mg <= 1, \
+        "the gate grid must be at most one compile"
+    sync_rows = [gate_sweep[i] for i in range(0, len(gate_cells), 2)]
+    async_rows = [gate_sweep[i] for i in range(1, len(gate_cells), 2)]
+    t_sync = [r.sim_time_s for row in sync_rows for r in row]
+    t_async = [r.sim_time_s for row in async_rows for r in row]
+    auc_sync = [r.auc for row in sync_rows for r in row]
+    auc_async = [r.auc for row in async_rows for r in row]
+    u, p_time, time_sig = mannwhitney_greater(t_sync, t_async)
+    # equal-or-better AUC: sync must NOT be significantly better
+    _, p_auc, auc_worse = mannwhitney_greater(auc_sync, auc_async)
+    gate = bool(time_sig and not auc_worse)
+
+    n_lanes = len(cells) * len(SEEDS)
+    report = {
+        "mode": mode,
+        "config": {"n_clients": N_CLIENTS, "rounds": ROUNDS,
+                   "seeds": list(SEEDS), "rate": RATE, "burst": BURST,
+                   "straggler_slow": SLOW, "buffers": list(BUFFERS),
+                   "staleness_pow": STALENESS_POW, "n_lanes": n_lanes,
+                   "dataset": "unsw", "backend": jax.default_backend(),
+                   "n_devices": len(jax.devices())},
+        "frontier": {
+            "wall_s_cold": t_cold,
+            "warm_execute_s_min": t_warm,
+            "warm_execute_s_all": warm_walls,
+            "warm_n": WARM_N,
+            "runner_compiles": misses,
+            "cells": frontier,
+        },
+        "async_gate": {
+            "fault_lanes": [name for name, _ in FAULT_LANES],
+            "rate": RATE,
+            "buffer_k": GATE_K,
+            "rounds": GATE_ROUNDS,
+            "seeds": list(GATE_SEEDS),
+            "sim_time_sync": t_sync,
+            "sim_time_async": t_async,
+            "auc_sync": auc_sync,
+            "auc_async": auc_async,
+            "mannwhitney_u": u,
+            "p_value_time": p_time,
+            "p_value_auc_sync_better": p_auc,
+            "async_beats_sync": gate,
+            "gated": not SMOKE,
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+
+    common.record_bench("async", [
+        {"lane_key": "frontier", "statics_key": common.statics_key(fl),
+         "wall_cold_s": t_cold, "warm_walls": warm_walls,
+         "lane_params": {"n_lanes": n_lanes, "rounds": ROUNDS,
+                         "buffers": list(BUFFERS)},
+         "metrics": {"runner_compiles": float(misses)}},
+    ] + [
+        {"lane_key": f"{e['plan']}@{e['fault']}",
+         "statics_key": common.statics_key(fl),
+         "lane_params": {"plan": e["plan"], "fault": e["fault"],
+                         "rate": RATE},
+         "metrics": {"auc_mean": (e["auc_mean"], 1),
+                     "acc_mean": e["acc_mean"],
+                     "sim_time_mean": e["sim_time_mean"]}}
+        for e in frontier
+    ] + [
+        {"lane_key": "async_gate", "statics_key": common.statics_key(fl),
+         "lane_params": {"buffer_k": GATE_K, "rate": RATE,
+                         "rounds": GATE_ROUNDS},
+         "metrics": {"p_value_time": p_time,
+                     "async_beats_sync": float(gate)}},
+    ], mode=mode)
+
+    print(f"  frontier x{n_lanes} lanes: {t_cold:7.2f}s cold, "
+          f"{t_warm:.2f}s warm (min-of-{WARM_N}), 1 compile")
+    for e in frontier:
+        print(f"    {e['plan']:>9s} on {e['fault']:>9s}: "
+              f"acc={e['acc_mean']:.3f} auc={e['auc_mean']:.3f} "
+              f"time={e['sim_time_mean']:7.1f}s")
+    print(f"  async gate (K={GATE_K:.0f}, pooled markov+straggler, "
+          f"{len(GATE_SEEDS)} seeds): sim time {np.mean(t_async):.1f}s vs "
+          f"sync {np.mean(t_sync):.1f}s -> Mann-Whitney p={p_time:.3e}, "
+          f"AUC {np.mean(auc_async):.3f} vs {np.mean(auc_sync):.3f} "
+          f"(sync-better p={p_auc:.2f}) -> "
+          f"{'PASS' if gate else 'ns'}"
+          f"{' (not gated in smoke)' if SMOKE else ''}")
+    print(f"  -> {os.path.abspath(OUT)}")
+
+    csv_rows.append(("async/frontier_cold_s", t_cold * 1e6,
+                     n_lanes * ROUNDS / t_cold))
+    csv_rows.append(("async/gate_p_time", 0.0, p_time))
+    return report
+
+
+if __name__ == "__main__":
+    # Standalone (and CI) entry: compile-count and plan-semantics
+    # assertions raise always; the Mann-Whitney wall-time gate exits
+    # nonzero only in full mode (smoke grids are too small to gate on).
+    report = run([])
+    ag = report["async_gate"]
+    if ag["gated"] and not ag["async_beats_sync"]:
+        raise SystemExit(
+            f"async gate failed: buffered_async does not beat synchronous "
+            f"client_parallel on simulated wall time at equal-or-better "
+            f"AUC (time p={ag['p_value_time']:.3e}, "
+            f"sync-better-AUC p={ag['p_value_auc_sync_better']:.3e})")

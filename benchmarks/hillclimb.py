@@ -2,6 +2,16 @@
 dry-run artifacts.  Each variant re-lowers + compiles the pair and prints
 the corrected roofline terms next to its baseline.
 
+Tuning history lives in the EXPERIMENT STORE (docs/DESIGN.md §8), not in
+ad-hoc JSON: every variant's roofline terms are written through
+``common.record_bench("hillclimb", ...)`` — one lane per (pair, variant),
+terms recorded lower-is-better so ``tools/bench_regress.py`` gates a
+variant that regresses against its own stored history, and
+``tools/metric_trajectory.py --bench hillclimb --metric roofline_s``
+prints the tuning trajectory across ENGINE_REV.  (``run_one`` still drops
+its per-variant dry-run JSON under benchmarks/artifacts/ — that is the
+full lowered-program forensics, not the comparison state.)
+
 Usage:
   PYTHONPATH=src:. python -m benchmarks.hillclimb [--pair A|B|C|all]
 
@@ -15,6 +25,9 @@ os.environ["XLA_FLAGS"] = (
 
 import argparse
 
+# store cells accumulated by show(), written through once per invocation
+_CELLS = []
+
 
 def _terms(r):
     prod = (r["meta"].get("scan") or {}).get("product", 1.0)
@@ -26,9 +39,21 @@ def _terms(r):
     )
 
 
-def show(tag, r):
+def show(tag, r, pair=""):
     c, m, x, t = _terms(r)
     print(f"  {tag:28s} C={c:8.2f}s M={m:8.2f}s X={x:8.2f}s temp={t:7.2f}GiB")
+    _CELLS.append({
+        "lane_key": f"{pair}:{tag}" if pair else tag,
+        "statics_key": f"{r['arch']}__{r['shape']}__{r['mesh']}",
+        "lane_params": {"arch": r["arch"], "shape": r["shape"],
+                        "mesh": r["mesh"], "tag": r["tag"]},
+        # lower-is-better directions: the regression gate flags a variant
+        # whose roofline terms grow against its own stored history
+        "metrics": {"roofline_s": (c + max(m, x), -1),
+                    "compute_s": (c, -1), "memory_s": (m, -1),
+                    "collective_s": (x, -1), "temp_gib": (t, -1),
+                    "compile_s": r["compile_s"]},
+    })
 
 
 def pair_a():
@@ -38,20 +63,22 @@ def pair_a():
 
     print("== Pair A: mistral_large_123b x train_4k ==")
     show("baseline ga16", run_one("mistral_large_123b", "train_4k", "single",
-                                  tag="rebase"))
+                                  tag="rebase"), pair="A")
     seqpar = dict(make_rules("client_serial", False))
     seqpar["act_seq"] = ("model",)
     show("A1 seq-parallel", run_one("mistral_large_123b", "train_4k", "single",
                                     step_kw={"rules_override": seqpar},
-                                    tag="seqpar"))
+                                    tag="seqpar"), pair="A")
     for ga in (8, 4):
         show(f"A2 ga={ga}", run_one("mistral_large_123b", "train_4k", "single",
-                                    step_kw={"grad_accum": ga}, tag=f"ga{ga}"))
+                                    step_kw={"grad_accum": ga}, tag=f"ga{ga}"),
+             pair="A")
     show("A3 ga8+dots", run_one("mistral_large_123b", "train_4k", "single",
                                 step_kw={"grad_accum": 8, "remat": "dots"},
-                                tag="ga8dots"))
+                                tag="ga8dots"), pair="A")
     show("A4 remat_group=8", run_one("mistral_large_123b", "train_4k", "single",
-                                     step_kw={"remat_group": 8}, tag="grp8"))
+                                     step_kw={"remat_group": 8}, tag="grp8"),
+         pair="A")
     print("  A6 (S² score buffers; flash-kernel fit argument): see "
           "EXPERIMENTS.md §Perf — probed via seq sweeps.")
 
@@ -63,20 +90,21 @@ def pair_b():
     print("== Pair B: mamba2_130m x decode_32k ==")
     show("baseline (heads)", run_one("mamba2_130m", "decode_32k", "single",
                                      step_kw={"ssm_shard": "heads"},
-                                     tag="heads"))
+                                     tag="heads"), pair="B")
     show("B1 ssm_shard=state", run_one("mamba2_130m", "decode_32k", "single",
                                        step_kw={"ssm_shard": "state"},
-                                       tag="ssmstate"))
+                                       tag="ssmstate"), pair="B")
     rules = {"embed": None, "mlp": None, "heads": None, "kv": None,
              "vocab": None, "experts": None, "layers": None,
              "act_batch": ("data",), "act_seq": None, "ssm_state": None}
     show("B2 replicated weights", run_one(
         "mamba2_130m", "decode_32k", "single",
         step_kw={"ssm_shard": "state", "rules_override": rules},
-        tag="replicated"))
+        tag="replicated"), pair="B")
     show("B3 conv replicated", run_one(
         "mamba2_130m", "decode_32k", "single",
-        step_kw={"ssm_shard": "state_convrep"}, tag="stateconvrep"))
+        step_kw={"ssm_shard": "state_convrep"}, tag="stateconvrep"),
+        pair="B")
 
 
 def pair_c():
@@ -86,11 +114,12 @@ def pair_c():
 
     print("== Pair C: llama4_maverick_400b x train_4k ==")
     show("baseline einsum MoE", run_one("llama4_maverick_400b", "train_4k",
-                                        "single", tag="rebase"))
+                                        "single", tag="rebase"), pair="C")
     T.MOE_IMPL[0] = "scatter"
     try:
         show("C1 scatter dispatch", run_one("llama4_maverick_400b", "train_4k",
-                                            "single", tag="scatter"))
+                                            "single", tag="scatter"),
+             pair="C")
     finally:
         T.MOE_IMPL[0] = "einsum"
 
@@ -105,6 +134,18 @@ def main():
         pair_b()
     if args.pair in ("C", "all"):
         pair_c()
+    if _CELLS:
+        # imported late: the XLA_FLAGS env tweak at module top must land
+        # before anything pulls in jax
+        from benchmarks import common
+        from repro.obs.store import ExperimentStore, default_store_path
+
+        common.record_bench(
+            "hillclimb", _CELLS, mode="full",
+            note=f"pair={args.pair} ({len(_CELLS)} variants)")
+        print()
+        print(ExperimentStore(default_store_path())
+              .trajectory_report("hillclimb", "roofline_s"))
 
 
 if __name__ == "__main__":

@@ -61,6 +61,7 @@ import traceback
 SMOKE_VARS = (
     "REPRO_SWEEP_SMOKE", "REPRO_PRIVACY_SMOKE", "REPRO_FAULT_SMOKE",
     "REPRO_MODELS_SMOKE", "REPRO_SCALE_SMOKE", "REPRO_SERVE_SMOKE",
+    "REPRO_ASYNC_SMOKE",
 )
 
 # canonical run order; discovery appends anything new alphabetically
@@ -76,6 +77,7 @@ GATES = {
     "sweep": [("acceptance.pass_warm_not_slower", "acceptance.gated")],
     "privacy": [("overhead.pass_within_5pct", "overhead.gated")],
     "fault": [("coupling_gate.coupling_saves_time", "coupling_gate.gated")],
+    "async": [("async_gate.async_beats_sync", "async_gate.gated")],
     "models": [("road_raw_auc.window_native_matches_or_beats_mlp",
                 "road_raw_auc.gated")],
     "serve": [("gate.all_models_pass", "gate.gated")],

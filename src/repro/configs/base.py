@@ -268,9 +268,34 @@ class FLConfig:
     server_opt: str = "sgd"             # sgd | fedavgm | fedadam
     server_lr: float = 1.0
     # --- execution plan ---
-    plan: str = "client_parallel"       # client_parallel | client_serial
+    # A name in the core/plans.py RoundPlan registry: client_parallel |
+    # client_serial | client_cohort | buffered_async | hierarchical.
+    # fl_static canonicalises the name to its STATIC program family, so
+    # same-family plans (client_parallel / buffered_async / hierarchical)
+    # share ONE compiled program and the concrete choice rides the runtime
+    # FLParams.plan_code lane — a mixed sync×async×hier sweep compiles once.
+    # Unknown names and incompatible plan/feature combinations are rejected
+    # at construction time (__post_init__ -> core.plans.validate_plan).
+    plan: str = "client_parallel"
     serial_clients_in_step: int = 4     # K folded into one lowered round step
     local_steps_in_step: int = 1        # local SGD steps per client in the step
+    # --- buffered_async plan (RUNTIME lanes; inert at 0 on sync lanes) ---
+    async_buffer: float = 0.0           # K of K-of-cohort aggregation (>=1 on
+                                        # the async plan; 0 = synchronous)
+    async_staleness_pow: float = 0.5    # staleness discount (1+s)^-pow; 0 ->
+                                        # all weights 1.0, bitwise sync FedAvg
+    # --- hierarchical plan ---
+    hier_comm_frac: float = 0.3         # RUNTIME: per-hop edge-comm cost as a
+                                        # fraction of the flat WAN hop
+    hierarchy_edges: int = 4            # STATIC: edge-aggregator count E
+                                        # (client i reports to edge i % E)
+
+    def __post_init__(self):
+        # Lazy import: core.plans is import-light and configs.base must not
+        # depend on core.rounds at module scope.  Runs on every
+        # dataclasses.replace too, so sweep cells are validated as built.
+        from repro.core.plans import validate_plan
+        validate_plan(self)
 
 
 class FLParams(NamedTuple):
@@ -304,26 +329,45 @@ class FLParams(NamedTuple):
     explore_noise: float = 0.05
     k_tol: float = 1e-3
     k_patience: float = 3.0
+    async_buffer: float = 0.0
+    async_staleness_pow: float = 0.5
+    hier_comm_frac: float = 0.3
+    # DERIVED lane code, not an FLConfig field: fl_params computes it from
+    # the STATIC plan name via the core/plans.py registry (0 sync flat |
+    # 1 buffered_async | 2 hierarchical), the same trick fault_process /
+    # dp_sched use to keep a categorical choice on the runtime lane axis.
+    plan_code: float = 0.0
 
 
 # FLConfig fields mirrored by FLParams (single source of truth for the
 # static/runtime split — fl_params/fl_static derive from this tuple).
-RUNTIME_FIELDS = tuple(FLParams._fields)
+# plan_code is derived from the plan name, not mirrored.
+RUNTIME_FIELDS = tuple(f for f in FLParams._fields if f != "plan_code")
 
 
 def fl_params(fl: FLConfig) -> FLParams:
-    """Extract the runtime knobs of ``fl`` as an :class:`FLParams` pytree."""
-    return FLParams(**{f: getattr(fl, f) for f in RUNTIME_FIELDS})
+    """Extract the runtime knobs of ``fl`` as an :class:`FLParams` pytree.
+
+    ``plan_code`` is derived from the STATIC plan name (core/plans.py):
+    the name picks the program family, the code picks the lane within it.
+    """
+    from repro.core.plans import plan_code
+    return FLParams(plan_code=plan_code(fl.plan),
+                    **{f: getattr(fl, f) for f in RUNTIME_FIELDS})
 
 
 def fl_static(fl: FLConfig) -> FLConfig:
     """Canonical STATIC part of ``fl``: every runtime field reset to its
-    dataclass default.  Two configs that differ only in runtime knobs map to
-    the same static config — the compiled-program cache keys on this, so an
-    ε/failure/lr grid compiles exactly once per (plan, shapes) cell."""
+    dataclass default AND the plan name canonicalised to its program
+    family.  Two configs that differ only in runtime knobs — or in
+    same-family plans (client_parallel vs buffered_async vs hierarchical;
+    the concrete plan is the runtime ``plan_code`` lane) — map to the same
+    static config, so the compiled-program cache serves a whole
+    plan × ε × failure grid from one entry."""
+    from repro.core.plans import plan_family
     defaults = {f: FLConfig.__dataclass_fields__[f].default
                 for f in RUNTIME_FIELDS}
-    return dataclasses.replace(fl, **defaults)
+    return dataclasses.replace(fl, plan=plan_family(fl.plan), **defaults)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,205 @@
+"""The execution-plan registry — RoundPlan, the engine's plan contract.
+
+``FLConfig.plan`` used to be a bare string fanned out across three
+hand-rolled builders in ``core/rounds.py``, with plan-specific special
+cases leaking into ``train/fl_driver.py``, ``launch/steps.py`` and
+``models/sharding.py``.  This module makes the contract explicit, the way
+``models/spec.py`` did for detector architectures: a :class:`RoundPlan`
+names everything the engine needs to know about a plan, and every dispatch
+site resolves the registry instead of comparing strings (docs/DESIGN.md
+§4).
+
+The pieces a plan provides:
+
+* **family** — the STATIC program family the plan lowers into.  This is
+  the load-bearing field for compilation: ``fl_static`` canonicalises
+  ``plan`` to its family, so every plan of one family shares ONE compiled
+  program and the concrete plan choice becomes the RUNTIME lane ``code``
+  (``FLParams.plan_code``), exactly like ``fault_process``/``dp_sched``.
+  ``buffered_async`` and ``hierarchical`` share the ``client_parallel``
+  family: the parallel round step always lowers the staleness-weighting
+  and edge-aggregation machinery and selects it branch-free, which is what
+  lets a mixed (sync × async × hierarchical) sweep compile once — and
+  keeps code-0 lanes bitwise the pre-registry engine (``x·1.0`` and
+  ``where(code≠…)`` identities; no new RNG draws on any lane).
+* **code** — the runtime lane value within the family (0.0 = the family's
+  base plan).
+* **builder** — the ``core/rounds.py`` round-step builder name (resolved
+  lazily via :meth:`RoundPlan.builder_fn` to keep this module import-light
+  and cycle-free under ``configs/base.py``).
+* **time_model** — which :func:`~repro.train.fl_driver.simulate_round_time`
+  semantics the plan's simulated wall time follows (documentation of the
+  branch-free select, not a dispatch key).
+* **fault_arrivals** — whether the plan consumes the failure-scenario
+  engine's arrival ordering (``repro.fault.arrival_score``): buffered-async
+  ranks client arrivals by the straggler/Weibull processes' emitted
+  ``slow`` factors and the per-client compute capacities.
+* **driver_capable / cohort_capable** — which front doors accept the plan
+  (``run_fl``/``run_fl_sweep`` vs ``run_fl_population``).  ``client_serial``
+  is launch-path only: the dense driver used to SILENTLY run the parallel
+  plan for it, which the registry now makes a loud error.
+* **requires** — config-build-time validation (``FLConfig.__post_init__``
+  calls :func:`validate_plan`), so a bad plan string or an incompatible
+  plan/feature combination fails at construction instead of surfacing as a
+  deep dispatch failure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """The registered execution-plan contract (see module docstring)."""
+
+    name: str
+    family: str              # STATIC program family (fl_static canonical form)
+    code: float              # runtime lane value (FLParams.plan_code)
+    builder: str             # round-step builder attribute in core/rounds.py
+    time_model: str          # simulate_round_time semantics tag
+    fault_arrivals: bool = False   # consumes repro.fault.arrival_score order
+    driver_capable: bool = True    # run_fl / run_fl_sweep front door
+    cohort_capable: bool = False   # run_fl_population front door
+    description: str = ""
+    # config-build-time cross-field validation: fl -> error message | None
+    requires: Optional[Callable] = field(default=None, compare=False,
+                                         repr=False)
+
+    def builder_fn(self) -> Callable:
+        """Resolve the round-step builder (lazy: core.rounds imports
+        configs.base, which imports this module — resolving at call time
+        keeps the triangle acyclic)."""
+        from repro.core import rounds as rounds_lib
+        return getattr(rounds_lib, self.builder)
+
+
+_REGISTRY: Dict[str, RoundPlan] = {}
+
+
+def register_plan(plan: RoundPlan) -> RoundPlan:
+    if plan.name in _REGISTRY:
+        raise ValueError(f"plan {plan.name!r} is already registered")
+    _REGISTRY[plan.name] = plan
+    return plan
+
+
+def plan_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def get_plan(name: str) -> RoundPlan:
+    """Resolve a plan name; unknown names list the registry (the clear
+    config-build-time error ISSUE 9 asks for)."""
+    plan = _REGISTRY.get(name)
+    if plan is None:
+        raise ValueError(
+            f"unknown FLConfig.plan {name!r}; registered plans: "
+            f"{', '.join(sorted(_REGISTRY))}")
+    return plan
+
+
+def plan_family(name: str) -> str:
+    """STATIC program family of a plan — what ``fl_static`` canonicalises
+    ``FLConfig.plan`` to, so same-family plans share one compiled program."""
+    return get_plan(name).family
+
+
+def plan_code(name: str) -> float:
+    """Runtime lane value of a plan (``FLParams.plan_code``)."""
+    return get_plan(name).code
+
+
+def plan_for_code(family: str, code: float) -> RoundPlan:
+    """Inverse of (family, code) — used when a raw :class:`FLParams` cell
+    carries a ``plan_code`` that differs from the base config's."""
+    for plan in _REGISTRY.values():
+        if plan.family == family and plan.code == float(code):
+            return plan
+    raise ValueError(f"no registered plan has family {family!r} "
+                     f"and code {code!r}")
+
+
+def validate_plan(fl) -> None:
+    """Config-build-time plan validation (``FLConfig.__post_init__``).
+
+    Rejects unknown plan names and plan/feature combinations the registry
+    marks incompatible — e.g. ``buffered_async`` without a positive
+    ``async_buffer``, or a sync plan with one (the buffer is the async
+    plan's K; leaving it set on a sync config silently means something
+    different from what was asked)."""
+    plan = get_plan(fl.plan)
+    if plan.requires is not None:
+        msg = plan.requires(fl)
+        if msg:
+            raise ValueError(f"FLConfig.plan={fl.plan!r}: {msg}")
+    if plan.name != "buffered_async" and float(fl.async_buffer) > 0:
+        raise ValueError(
+            f"FLConfig.plan={fl.plan!r} is not the buffered_async plan but "
+            f"async_buffer={fl.async_buffer} is set — the buffer K only has "
+            "meaning on the async plan (use plan='buffered_async', or leave "
+            "async_buffer at 0)")
+
+
+def _require_async_buffer(fl) -> Optional[str]:
+    if float(fl.async_buffer) < 1:
+        return (f"needs async_buffer >= 1 (the K of K-of-cohort "
+                f"aggregation), got {fl.async_buffer}")
+    return None
+
+
+def _require_edges(fl) -> Optional[str]:
+    if int(fl.hierarchy_edges) < 1:
+        return (f"needs hierarchy_edges >= 1 (the static edge-aggregator "
+                f"count), got {fl.hierarchy_edges}")
+    return None
+
+
+def _require_cohort_kmax(fl) -> Optional[str]:
+    if not fl.k_max or int(fl.k_max) <= 0:
+        return ("needs an explicit positive k_max (the static cohort size "
+                "gathered to the compute lanes)")
+    return None
+
+
+register_plan(RoundPlan(
+    name="client_parallel", family="client_parallel", code=0.0,
+    builder="make_parallel_round", time_model="sync_slowest",
+    driver_capable=True, cohort_capable=True,
+    description=("synchronous FedAvg, clients vmapped on the data mesh "
+                 "axes; the paper's plan and every default lane")))
+
+register_plan(RoundPlan(
+    name="client_serial", family="client_serial", code=0.0,
+    builder="make_serial_round", time_model="sync_slowest",
+    driver_capable=False, cohort_capable=False,
+    description=("one client at a time with the whole mesh (FSDP); the "
+                 "launch-path plan for >=10B models — not servable by the "
+                 "dense driver (host feeds the K slots)")))
+
+register_plan(RoundPlan(
+    name="client_cohort", family="client_cohort", code=0.0,
+    builder="make_cohort_round", time_model="sync_slowest",
+    driver_capable=False, cohort_capable=True,
+    requires=_require_cohort_kmax,
+    description=("population-scale plan: on-device cohort top-k, O(k_max) "
+                 "training — run_fl_population's execution form")))
+
+register_plan(RoundPlan(
+    name="buffered_async", family="client_parallel", code=1.0,
+    builder="make_parallel_round", time_model="async_kth_arrival",
+    fault_arrivals=True, driver_capable=True, cohort_capable=False,
+    requires=_require_async_buffer,
+    description=("FedBuff-style buffered async: the server applies the "
+                 "aggregate once K updates arrive (arrival order from the "
+                 "straggler/Weibull processes), late updates "
+                 "staleness-discounted by (1+s)^-async_staleness_pow")))
+
+register_plan(RoundPlan(
+    name="hierarchical", family="client_parallel", code=2.0,
+    builder="make_parallel_round", time_model="hier_two_tier",
+    driver_capable=True, cohort_capable=False,
+    requires=_require_edges,
+    description=("two-tier edge->cloud FedAvg: clients FedAvg within "
+                 "hierarchy_edges static edge groups (client i -> edge "
+                 "i % E), the cloud means the live edge aggregates")))

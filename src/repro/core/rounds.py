@@ -1,14 +1,28 @@
 """The FL round engine — Algorithm 1 as a lowered JAX step.
 
-Two execution plans (DESIGN.md §4):
+The execution plans are registered :class:`~repro.core.plans.RoundPlan`
+contracts (DESIGN.md §4); this module provides their round-step builders:
 
-* ``client_parallel``: clients live on the leading axis of every batch leaf
-  (sharded over the ``data``(×``pod``) mesh axes).  Local training runs as a
-  ``vmap`` over clients; aggregation is a masked weighted mean over the
-  client axis (GSPMD turns it into the all-reduce).
-* ``client_serial``: one client at a time with the WHOLE mesh (FSDP over
-  ``data``); ``lax.scan`` over the K selected clients.  This is the only
-  plan that fits ≥100B-parameter models.
+* ``client_parallel`` (:func:`make_parallel_round`): clients live on the
+  leading axis of every batch leaf (sharded over the ``data``(×``pod``)
+  mesh axes).  Local training runs as a ``vmap`` over clients; aggregation
+  is a masked weighted mean over the client axis (GSPMD turns it into the
+  all-reduce).
+* ``buffered_async`` / ``hierarchical`` — RUNTIME lanes of the SAME
+  ``client_parallel`` program family: the parallel round step always
+  lowers the FedBuff staleness-weighting and the two-tier edge
+  aggregation, and the ``FLParams.plan_code`` lane selects them
+  branch-free (0 sync flat | 1 async | 2 hierarchical), exactly like the
+  ``fault_process`` code.  Code-0 lanes are bitwise the pre-registry
+  engine: the selects are ``where``/``·1.0`` identities and no lane draws
+  new RNG — async arrival order derives from the failure-scenario
+  engine's emitted ``slow`` factors and the per-client compute
+  capacities (``repro.fault.arrival_score``), never from fresh keys.
+* ``client_serial`` (:func:`make_serial_round`): one client at a time with
+  the WHOLE mesh (FSDP over ``data``); ``lax.scan`` over the K selected
+  clients.  This is the only plan that fits ≥100B-parameter models.
+* ``client_cohort`` (:func:`make_cohort_round`): the population-scale
+  form — O(k_max) training over an on-device-sampled cohort.
 
 Fault-tolerance semantics inside a lowered step (DESIGN.md §6): failure
 times come from the pluggable failure-scenario engine (``repro/fault``) —
@@ -291,10 +305,57 @@ def make_parallel_round(loss_fn: Callable, fl: FLConfig, n_clients: int,
         # drop clients whose surviving work is zero
         contrib_mask = sel_mask * (eff_steps > 0)
 
+        # ---- buffered_async (plan_code 1): staleness-weighted arrivals ----
+        # FedBuff semantics, eager-application form: every contributor's
+        # update still lands this round, but discounted by how many K-sized
+        # buffer flushes precede its arrival — staleness s_i = floor(rank/K),
+        # weight (1+s)^-async_staleness_pow.  Arrival order comes from the
+        # failure-scenario engine (straggler slow factors × compute
+        # capacity), NOT from new draws, so every other lane's RNG stream is
+        # untouched.  On non-async lanes the weight is exactly 1.0 and
+        # contrib·1.0 is bitwise contrib — default lanes cannot move.
+        with jax.named_scope("async_buffer"):
+            arrive = fault_proc.arrival_score(slow, state.util.compute)
+            arrive = jnp.where(contrib_mask > 0, arrive, jnp.inf)
+            rank = jnp.argsort(jnp.argsort(arrive)).astype(jnp.float32)
+            stale = jnp.floor(rank / jnp.maximum(pr.async_buffer, 1.0))
+            stale_w = jnp.power(1.0 + stale, -pr.async_staleness_pow)
+            agg_mask = contrib_mask * jnp.where(pr.plan_code == 1.0, stale_w,
+                                                jnp.ones_like(stale_w))
+
+        # ---- hierarchical (plan_code 2): edge FedAvg -> cloud mean ----
+        # Client i reports to edge i % E (static shape, E = hierarchy_edges);
+        # each edge computes the same weighted FedAvg the flat plan does over
+        # its own group, and the cloud takes the unweighted mean over LIVE
+        # edges (edges whose contributor weight is nonzero).  Always lowered,
+        # selected away by a where on non-hier lanes — the fault engine's
+        # branch-free pattern.
+        with jax.named_scope("hier_aggregate"):
+            n_edges = max(int(fl.hierarchy_edges), 1)
+            edge_id = jnp.arange(n_clients) % n_edges
+            w_cli = (agg_mask * state.util.data_size).astype(jnp.float32)
+            edge_w = jnp.zeros((n_edges,), jnp.float32).at[edge_id].add(w_cli)
+            edge_live = (edge_w > 0).astype(jnp.float32)
+            n_live = jnp.maximum(jnp.sum(edge_live), 1.0)
+            is_hier = pr.plan_code == 2.0
+
+            def _hier_agg(d):
+                df = d.astype(jnp.float32)
+                wb = w_cli.reshape((-1,) + (1,) * (df.ndim - 1))
+                esum = jnp.zeros((n_edges,) + df.shape[1:],
+                                 jnp.float32).at[edge_id].add(df * wb)
+                tail = (1,) * (df.ndim - 1)
+                edelta = esum / jnp.maximum(edge_w, 1e-9).reshape((-1,) + tail)
+                live = edge_live.reshape((-1,) + tail)
+                return jnp.sum(edelta * live, axis=0) / n_live
+
         # ---- aggregation + server update (line 18) ----
         with jax.named_scope("aggregate"):
-            agg_delta = agg.aggregate_stacked(deltas, contrib_mask,
+            agg_delta = agg.aggregate_stacked(deltas, agg_mask,
                                               state.util.data_size)
+            agg_delta = jax.tree.map(
+                lambda flat, d: jnp.where(is_hier, _hier_agg(d), flat),
+                agg_delta, deltas)
             new_params, new_server_state = agg.apply_server_update(
                 server, state.params, state.server_opt_state, agg_delta
             )

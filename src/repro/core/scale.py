@@ -75,6 +75,17 @@ def selection_transient_bytes(n_clients: int, chunks: int = 1) -> int:
     return SELECTION_BUFFERS * per_chunk * _F32
 
 
+def plan_transient_buffers(plan: str) -> int:
+    """Extra per-round [n] f32 transients a registered execution plan adds
+    on top of the selection pass, read off the core/plans registry: plans
+    flagged ``fault_arrivals`` (buffered_async) materialise an arrival-score
+    and an arrival-rank vector to order updates.  Memory accounting routes
+    through the registry so a new plan extends the budget model by
+    registering, not by editing this module."""
+    from repro.core.plans import get_plan  # lazy: scale stays import-light
+    return 2 if get_plan(plan).fault_arrivals else 0
+
+
 def cohort_batch_bytes(k_max: int, local_steps: int, batch: int,
                        n_features: int) -> int:
     """Bytes of one round's gathered cohort batches (x f32 + y i32) —

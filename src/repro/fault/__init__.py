@@ -12,13 +12,13 @@
 from repro.core.fault import (checkpoint_cost, fit_weibull,
                               optimal_checkpoint_interval, recovery_overhead,
                               weibull_failure_prob)
-from repro.fault.process import (PROCESSES, FaultState, fault_step,
-                                 iid_fail_times, init_fault_state,
-                                 process_code)
+from repro.fault.process import (PROCESSES, FaultState, arrival_score,
+                                 fault_step, iid_fail_times,
+                                 init_fault_state, process_code)
 
 __all__ = [
-    "PROCESSES", "FaultState", "checkpoint_cost", "fault_step",
-    "fit_weibull", "iid_fail_times", "init_fault_state",
+    "PROCESSES", "FaultState", "arrival_score", "checkpoint_cost",
+    "fault_step", "fit_weibull", "iid_fail_times", "init_fault_state",
     "optimal_checkpoint_interval", "process_code", "recovery_overhead",
     "weibull_failure_prob",
 ]

@@ -160,6 +160,18 @@ def fault_step(state: FaultState, k_fail, pr, n: int,
     return fail_at, slow, new_state
 
 
+def arrival_score(slow, compute):
+    """Per-client arrival-order score for the ``buffered_async`` plan
+    (core/plans.py ``fault_arrivals``): update i arrives in order of
+    ``slow_i / compute_i`` — the same straggler/Weibull-process ``slow``
+    factors and compute capacities :func:`simulate_round_time`'s per-client
+    time uses (its ``steps × base_step_time`` factor scales every client
+    equally, so the RANKS agree exactly).  No RNG: arrival order is fully
+    driven by the existing failure processes, which is what keeps every
+    other lane's key stream untouched."""
+    return slow / jnp.maximum(compute, 0.1)
+
+
 def gather_cohort(fail_at, slow, cohort_idx):
     """Cohort view of one round's process outputs (the population engine,
     ARCHITECTURE.md §Scale): the processes evolve the FULL [n] population

@@ -25,6 +25,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import FLConfig, MeshConfig, ModelConfig, ShapeConfig
+from repro.core import plans as plans_lib
 from repro.core import rounds as rounds_lib
 from repro.models.model import Model, build, effective_window
 from repro.models.sharding import logical_to_pspec, make_rules, sanitize_pspec
@@ -220,12 +221,18 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
                      rules_override: Optional[dict] = None) -> StepBundle:
     model = build(cfg)
     plan = plan or choose_plan(cfg)
+    # Resolve the plan against the core/plans registry ONCE: everything
+    # below branches on the STATIC program family, so a registered
+    # same-family plan (buffered_async / hierarchical ride the
+    # client_parallel program) needs no new branch here.
+    plan_spec = plans_lib.get_plan(plan)
+    family = plan_spec.family
     rules = dict(rules_override or make_rules(plan, mesh_cfg.multi_pod))
     client_axes = _client_axes(mesh_cfg)
     n_client_slots = _mesh_size(mesh_cfg, client_axes)
     data_shards = _mesh_size(mesh_cfg, client_axes)
 
-    if plan == "client_parallel":
+    if family == "client_parallel":
         n_clients = n_client_slots
         per_client_batch = max(1, shape.global_batch // n_clients)
         ga = 1
@@ -241,7 +248,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
     # ---- input specs -------------------------------------------------------
     base = model.input_specs(dataclasses.replace(shape, global_batch=per_client_batch))
     steps = fl.local_steps_in_step
-    lead = (n_clients, steps) if plan == "client_parallel" else (
+    lead = (n_clients, steps) if family == "client_parallel" else (
         fl.serial_clients_in_step, steps)
     batches = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct(lead + s.shape, s.dtype), base
@@ -266,7 +273,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
         rng=_ns(mesh, P()),
         fault=jax.tree.map(lambda _: _ns(mesh, P()), state_spec.fault),
     )
-    if plan == "client_parallel":
+    if family == "client_parallel":
         lead_spec = (client_axes, None)
     else:
         ab = rules.get("act_batch")
@@ -278,7 +285,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
     )
 
     # ---- round builder ----------------------------------------------------
-    if plan == "client_parallel":
+    builder = plan_spec.builder_fn()
+    if family == "client_parallel":
         def delta_constraint(deltas, _axes=model.axes()):
             def one(d, a):
                 # leading client axis pinned to the data mesh axes; inner
@@ -294,13 +302,13 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
                     y is None or isinstance(y, str) for y in x),
             )
 
-        round_step = rounds_lib.make_parallel_round(
+        round_step = builder(
             loss_fn, fl, n_clients, grad_accum=ga, delta_constraint=delta_constraint
         )
         ctx_rules = None  # vmap over clients: no in-model constraints
     else:
         delta_dtype = jnp.bfloat16 if cfg.param_count() > 100e9 else jnp.float32
-        round_step = rounds_lib.make_serial_round(
+        round_step = builder(
             loss_fn, fl, n_clients, grad_accum=ga, delta_dtype=delta_dtype
         )
         ctx_rules = rules

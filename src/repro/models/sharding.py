@@ -108,7 +108,7 @@ RULES_PARALLEL = {
 }
 
 
-def with_pod(rules: dict, multi_pod: bool, plan: str) -> dict:
+def with_pod(rules: dict, multi_pod: bool, family: str) -> dict:
     """Extend a rule table with the 'pod' axis for the 2x16x16 mesh.
 
     client_serial: pod joins the FSDP/data-parallel group (one giant client
@@ -118,7 +118,7 @@ def with_pod(rules: dict, multi_pod: bool, plan: str) -> dict:
     if not multi_pod:
         return rules
     r = dict(rules)
-    if plan == "client_serial":
+    if family == "client_serial":
         if r["embed"]:
             r["embed"] = ("pod", "data")
         r["act_batch"] = ("pod", "data")
@@ -128,8 +128,13 @@ def with_pod(rules: dict, multi_pod: bool, plan: str) -> dict:
 
 
 def make_rules(plan: str, multi_pod: bool) -> dict:
-    base = RULES_SERIAL if plan == "client_serial" else RULES_PARALLEL
-    return with_pod(base, multi_pod, plan)
+    """Sharding rules for a registered plan — keyed on the plan's STATIC
+    program family (core/plans.py), so same-family plans (buffered_async /
+    hierarchical ride client_parallel) share one rule table."""
+    from repro.core.plans import plan_family  # lazy: keep this module light
+    family = plan_family(plan)
+    base = RULES_SERIAL if family == "client_serial" else RULES_PARALLEL
+    return with_pod(base, multi_pod, family)
 
 
 # ---------------------------------------------------------------------------

@@ -232,6 +232,48 @@ class ExperimentStore:
                 out.append((int(c["run_id"]), float(v)))
         return out
 
+    def metric_trajectory(self, bench: str, lane_key: str, metric: str
+                          ) -> List[Tuple[int, str, float]]:
+        """``[(run_id, engine_rev, value), ...]`` oldest-first ACROSS engine
+        revisions — the "AUC trajectory across ENGINE_REV" report (ROADMAP):
+        unlike :meth:`metric_history` (which restricts to one rev so the
+        regression gate compares like with like), this deliberately spans
+        every rev so a metric can be followed through engine rewrites —
+        each point is labelled with the rev that produced it, because a
+        jump at a rev boundary is an engine change, not a regression."""
+        out = []
+        for c in self.history(bench, lane_key):
+            if metric == "wall_warm_s":
+                v = c.get("wall_warm_s")
+            else:
+                m = c["metrics"].get(metric)
+                v = m["value"] if m else None
+            if v is not None:
+                out.append((int(c["run_id"]), c.get("engine_rev") or "",
+                            float(v)))
+        return out
+
+    def trajectory_report(self, bench: str, metric: str) -> str:
+        """Human-readable ``metric_trajectory`` over every lane of a bench
+        (``tools/metric_trajectory.py`` CLI): one block per lane, one line
+        per stored run, engine-rev labelled, with the delta vs the
+        previous point."""
+        lines = [f"== {bench}: {metric} trajectory across ENGINE_REV =="]
+        for _, lane in self.lanes(bench):
+            traj = self.metric_trajectory(bench, lane, metric)
+            if not traj:
+                continue
+            lines.append(f"  {lane}:")
+            prev = None
+            for run_id, rev, v in traj:
+                delta = "" if prev is None else f"  ({v - prev:+.4f})"
+                lines.append(f"    run {run_id:>4d} [{rev or '?':>10s}]"
+                             f"  {v:.4f}{delta}")
+                prev = v
+        if len(lines) == 1:
+            lines.append(f"  (no stored cells carry metric {metric!r})")
+        return "\n".join(lines)
+
     def lanes(self, bench: Optional[str] = None) -> List[Tuple[str, str]]:
         """Distinct (bench, lane_key) pairs recorded so far."""
         q = "SELECT DISTINCT bench, lane_key FROM cells"

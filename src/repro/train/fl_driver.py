@@ -74,6 +74,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.configs.base import (FLConfig, FLParams, fl_params, fl_static)
 from repro.core import fault as fault_lib
+from repro.core import plans as plans_lib
 from repro.core import rounds as rounds_lib
 from repro.core import scale as scale_lib
 from repro.data.synthetic import (FederatedData, Population,
@@ -215,6 +216,19 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
     all-ones on every other lane, where ``x·1.0`` is bitwise ``x``).  The
     round waits for the slowest selected client, so one straggler stretches
     the whole cohort's round — exactly the synchronous-FL pathology.
+
+    Plan time models (DESIGN.md §4) ride the runtime ``plan_code`` lane,
+    branch-free like everything else, so a mixed plan frontier shares the
+    program and code-0 lanes stay bitwise the synchronous model:
+
+    * ``buffered_async`` (code 1) — the server flushes once K =
+      ``async_buffer`` updates arrive, so the round costs the K-th
+      smallest per-client compute time (capped at the slowest when fewer
+      than K contribute) + communication; checkpoint writes and recovery
+      leave the critical path (the server never waits for dead clients).
+    * ``hierarchical`` (code 2) — slowest client + two cheaper hops
+      (client→edge and edge→cloud, each ``hier_comm_frac`` of the flat
+      WAN hop) instead of the flat client→cloud communication.
     """
     pr = fl_params(fl) if params is None else params
     sel = sel_mask > 0
@@ -224,7 +238,13 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
     if slow is not None:
         compute = compute * slow
     slowest = jnp.max(jnp.where(sel, compute, 0.0))
-    t = slowest + comm_time * (1.0 + param_kb / 1024.0)
+    comm_full = comm_time * (1.0 + param_kb / 1024.0)
+
+    # Synchronous chain — textually the pre-registry expression.  The plan
+    # variants are selected AFTER the chain (not interleaved into it) so
+    # XLA constant-folds the scalar additions exactly as it always did and
+    # code-0 lanes stay bitwise (tests/test_plans.py golden pins).
+    t = slowest + comm_full
     if fl.dp_enabled:
         t = t + 0.01  # clip+noise pass
     n_failed_sel = jnp.sum(jnp.where(sel, failed, 0.0))
@@ -234,6 +254,26 @@ def simulate_round_time(fl: FLConfig, util_state, sel_mask, failed,
     else:
         # failed clients redo the whole round next time: amortised penalty
         t = t + n_failed_sel * slowest
+
+    # buffered_async (code 1): K-th smallest selected arrival — the same
+    # per-client compute vector, straggler-stretched, so arrival ORDER is
+    # the failure-scenario engine's (repro.fault.arrival_score ranks agree;
+    # capped at the slowest when fewer than K contribute).  No checkpoint
+    # or recovery stall: the buffer flushes without waiting on the dead.
+    arrivals = jnp.sort(jnp.where(sel, compute, jnp.inf))
+    k_idx = jnp.clip(pr.async_buffer, 1.0,
+                     float(sel_mask.shape[0])).astype(jnp.int32) - 1
+    kth = jnp.minimum(jnp.take(arrivals, k_idx), slowest)
+    t_async = kth + comm_full
+    if fl.dp_enabled:
+        t_async = t_async + 0.01
+
+    # hierarchical (code 2): same synchronous chain, but the flat WAN hop
+    # is replaced by two edge hops each at hier_comm_frac of its cost
+    t_hier = t - comm_full + 2.0 * pr.hier_comm_frac * comm_full
+
+    t = jnp.where(pr.plan_code == 1.0, t_async,
+                  jnp.where(pr.plan_code == 2.0, t_hier, t))
     return jnp.where(any_sel, t, comm_time)
 
 
@@ -325,10 +365,23 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
 
     spec = get_model_spec(fl.model, meta)
 
+    # ``fl`` is canonicalised (fl_static: plan → program family), so the
+    # registry hands back the family's round builder; plans outside the
+    # client_parallel family have their own drivers and fail loudly here
+    # instead of silently running the wrong program (pre-registry, a
+    # client_serial config fell through to the parallel round step).
+    plan = plans_lib.get_plan(fl.plan)
+    if plan.family != "client_parallel":
+        raise ValueError(
+            f"the compiled sweep engine runs the 'client_parallel' program "
+            f"family; plan {fl.plan!r} (family {plan.family!r}) is not "
+            "driver-capable — see the core/plans registry for its engine")
+    builder = plan.builder_fn()
+
     def single_run(key, stack: StackedFederation, data_size, data_quality,
                    pr: FLParams):
         n_clients = stack.n_clients
-        round_step = rounds_lib.make_parallel_round(spec.loss, fl, n_clients)
+        round_step = builder(spec.loss, fl, n_clients)
         tx, ty = stack.test_x, stack.test_y
         k_static = jnp.asarray(float(fl.clients_per_round), jnp.float32)
 
@@ -514,18 +567,38 @@ def _lane_sharding(n_lanes: int):
             NamedSharding(mesh, PartitionSpec()))
 
 
-def _sweep_cells(fl: FLConfig, params_grid: Sequence,
-                 method: str) -> List[FLConfig]:
+def _sweep_cells(fl: FLConfig, params_grid: Sequence, method: str,
+                 capability: str = "driver_capable") -> List[FLConfig]:
     """Resolve a params_grid into per-cell FLConfigs sharing ``fl``'s
-    statics (shared by the sweep and population engines)."""
+    statics (shared by the sweep and population engines).
+
+    Each cell's plan is resolved against the core/plans registry and must
+    carry ``capability`` (``driver_capable`` for the dense engines,
+    ``cohort_capable`` for the population engine).  Plans in the same
+    *family* (``fl_static`` canonicalises plan → family) may differ across
+    cells — that is how a mixed sync/async/hierarchical frontier rides the
+    ``plan_code`` lane of one compiled program.
+    """
     cells: List[FLConfig] = []
     for p in params_grid:
         if isinstance(p, FLConfig):
             cell = fl_for_method(p, method)
         elif isinstance(p, FLParams):
-            cell = dataclasses.replace(fl, **p._asdict())
+            # plan_code is derived from FLConfig.plan, not a config field:
+            # map a differing code back to the registered plan name
+            overrides = p._asdict()
+            code = float(overrides.pop("plan_code"))
+            cell = dataclasses.replace(fl, **overrides)
+            if code != plans_lib.plan_code(cell.plan):
+                cell = dataclasses.replace(
+                    cell, plan=plans_lib.plan_for_code(
+                        plans_lib.plan_family(cell.plan), code))
         else:
             cell = dataclasses.replace(fl, **dict(p))
+        if not getattr(plans_lib.get_plan(cell.plan), capability):
+            raise ValueError(
+                f"plan {cell.plan!r} cannot run on this engine: the "
+                f"core/plans registry marks it {capability}=False")
         if fl_static(cell) != fl_static(fl):
             raise ValueError(
                 "params_grid cell differs from the base config in a STATIC "
@@ -592,7 +665,8 @@ def run_fl_sweep(
 
     t0 = time.time()
     with obs_trace.span("sweep.prepare", method=method, n_lanes=n_lanes,
-                        n_cells=len(cells), rounds=rounds):
+                        n_cells=len(cells), rounds=rounds,
+                        plans=",".join(sorted({c.plan for c in cells}))):
         meta = meta_for(fed, hidden=hidden)
         stack, data_size, data_quality = _device_federation(fed)
         runner = _get_runner(fl, rounds, eval_every, meta, n_padded, stack)
@@ -943,7 +1017,7 @@ def run_fl_population(
     rounds = int(rounds or fl.rounds)
     seeds = [int(s) for s in seeds]
     cells = _sweep_cells(fl, [fl] if params_grid is None else params_grid,
-                         method)
+                         method, capability="cohort_capable")
     if not cells:
         return []
     n_lanes = len(cells) * len(seeds)
@@ -1041,6 +1115,12 @@ def run_fl_legacy(
         raise ValueError(
             "run_fl_legacy does not support dp_scheduled configs; use the "
             "compiled engine (run_fl / run_fl_batch / run_fl_sweep)")
+    legacy_plan = plans_lib.get_plan(fl.plan)
+    if legacy_plan.family != "client_parallel" or legacy_plan.code != 0.0:
+        raise ValueError(
+            f"run_fl_legacy implements only the synchronous client_parallel "
+            f"plan; plan {fl.plan!r} needs the compiled engine "
+            "(run_fl / run_fl_sweep)")
     rounds = rounds or fl.rounds
     rng = np.random.default_rng(seed)
     key = jax.random.key(seed)

@@ -1,0 +1,112 @@
+"""Capture pre-refactor golden values for the plan-registry refactor.
+
+Run from the repo root (PYTHONPATH=src python tests/capture_golden_plans.py)
+against the PRE-refactor engine; writes tests/golden/plans_prerefactor.json.
+tests/test_plans.py pins the refactored plans against these values bitwise.
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.configs.base import FLConfig
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import (make_federated, make_population,
+                                  round_batches, stack_federation)
+from repro.models.spec import get_model_spec, meta_for
+from repro.train import fl_driver
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                   "plans_prerefactor.json")
+
+
+def parallel_case():
+    fed = make_federated(0, "unsw", n_samples=600, n_clients=8)
+    fl = FLConfig(n_clients=8, clients_per_round=3, rounds=6, local_epochs=2,
+                  local_batch=16, local_lr=0.08, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=200.0, dp_clip=5.0,
+                  fault_tolerance=True, failure_prob=0.1)
+    r = fl_driver.run_fl(fed, fl, "proposed", seed=3, rounds=6, eval_every=2)
+    return {"history": r.history, "sim_time_s": r.sim_time_s}
+
+
+def serial_case():
+    """Two direct make_serial_round steps (the driver never routes here)."""
+    fed = make_federated(1, "unsw", n_samples=400, n_clients=6)
+    fl = FLConfig(n_clients=6, clients_per_round=3, rounds=4, local_epochs=2,
+                  local_batch=8, local_lr=0.05, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=100.0, dp_clip=2.0,
+                  plan="client_serial", serial_clients_in_step=3,
+                  fault_tolerance=True, failure_prob=0.1)
+    meta = meta_for(fed, hidden=16)
+    spec = get_model_spec(fl.model, meta)
+    key = jax.random.key(7)
+    params = spec.init(jax.random.fold_in(key, 0))
+    sizes = fed.data_sizes()
+    state = rounds_lib.init_round_state(
+        params, fl, jax.random.fold_in(key, 1), n_clients=fed.n_clients,
+        data_size=jnp.asarray(sizes / sizes.mean()),
+        data_quality=jnp.asarray(fed.label_entropy()))
+    step = jax.jit(rounds_lib.make_serial_round(spec.loss, fl, fed.n_clients))
+    rng = np.random.default_rng(5)
+    out = {"global_loss": [], "k_effective": [], "sel_mask": [], "norms": []}
+    for _ in range(2):
+        batches = jax.tree.map(jnp.asarray, round_batches(
+            rng, fed, fl.local_epochs, fl.local_batch))
+        batches = jax.tree.map(lambda x: x[: fl.serial_clients_in_step],
+                               batches)
+        state, m = step(state, batches)
+        out["global_loss"].append(float(m.global_loss))
+        out["k_effective"].append(float(m.k_effective))
+        out["sel_mask"].append(np.asarray(m.sel_mask).tolist())
+        out["norms"].append(np.asarray(m.update_norms).tolist())
+    return out
+
+
+def cohort_case():
+    pop = make_population(0, n_clients=64, pool_samples=600,
+                          members_per_client=16)
+    fl = FLConfig(n_clients=64, clients_per_round=8, k_max=8, rounds=6,
+                  local_epochs=2, local_batch=16, local_lr=0.08,
+                  fault_tolerance=True, failure_prob=0.05)
+    r = fl_driver.run_fl_population(pop, fl, seeds=(0,), rounds=6,
+                                    eval_every=3)[0][0]
+    return {"history": r.history, "sim_time_s": r.sim_time_s}
+
+
+def sweep_case():
+    """A (fault_process x rate) sweep, history columns per lane."""
+    fed = make_federated(0, "unsw", n_samples=600, n_clients=8)
+    fl = FLConfig(n_clients=8, clients_per_round=3, rounds=4, local_epochs=2,
+                  local_batch=16, local_lr=0.08, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=200.0, dp_clip=5.0,
+                  fault_tolerance=True, failure_prob=0.05)
+    cells = [{"fault_process": 0.0, "failure_prob": 0.3},
+             {"fault_process": 1.0, "failure_prob": 0.3},
+             {"fault_process": 3.0, "failure_prob": 0.3}]
+    sweep = fl_driver.run_fl_sweep(fed, fl, cells, seeds=(0, 1), rounds=4,
+                                   eval_every=2)
+    return {"histories": [[r.history for r in row] for row in sweep]}
+
+
+def main():
+    golden = {
+        "parallel": parallel_case(),
+        "serial": serial_case(),
+        "cohort": cohort_case(),
+        "sweep": sweep_case(),
+    }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print("wrote", OUT)
+
+
+if __name__ == "__main__":
+    main()

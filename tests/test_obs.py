@@ -195,6 +195,26 @@ def test_store_round_trip_and_history(tmp_path):
     store.close()
 
 
+def test_metric_trajectory_crosses_engine_revs(tmp_path):
+    # metric_history is per-rev by design; the trajectory report is the
+    # complementary cross-rev view, each point labelled with its rev.
+    store = ExperimentStore(str(tmp_path / "exp.sqlite"))
+    for rev, auc in [("models3", 0.58), ("models4", 0.61),
+                     ("models4", 0.63)]:
+        rid = store.begin_run(engine_rev=rev, backend="cpu", mode="test")
+        store.record_cell(rid, "hillclimb", "A:baseline",
+                          metrics={"roofline_s": (auc, -1)})
+    traj = store.metric_trajectory("hillclimb", "A:baseline", "roofline_s")
+    assert traj == [(1, "models3", 0.58), (2, "models4", 0.61),
+                    (3, "models4", 0.63)]
+    report = store.trajectory_report("hillclimb", "roofline_s")
+    assert "A:baseline" in report and "models3" in report
+    assert "no stored cells" in store.trajectory_report("hillclimb",
+                                                        "nope")
+    assert store.metric_trajectory("hillclimb", "A:baseline", "nope") == []
+    store.close()
+
+
 # ---------------------------------------------------------------------------
 # regression gate: idle without history, fires on injection, quiet on replay
 # ---------------------------------------------------------------------------

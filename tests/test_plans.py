@@ -1,0 +1,351 @@
+"""Execution-plan registry (core/plans.py) — the RoundPlan contract.
+
+Four layers of pins:
+
+* **Golden bitwise pins** — the three pre-refactor plans replayed against
+  ``tests/golden/plans_prerefactor.json`` (captured by
+  ``tests/capture_golden_plans.py`` BEFORE the registry landed): the
+  refactor may not move a single bit of any default lane.
+* **Registry contract** — names, families, lane codes, builder resolution
+  and the code→plan inverse.
+* **Rejection paths** — unknown plans and plan/feature combinations the
+  registry marks incompatible fail loudly at config build or front-door
+  time (pre-registry, ``run_fl(plan="client_serial")`` SILENTLY ran the
+  parallel program).
+* **New-plan semantics** — a mixed sync × async × hierarchical sweep
+  compiles as ONE program; zero-staleness buffered_async is bitwise
+  synchronous FedAvg on every model-path column; the async K-th-arrival
+  time model undercuts the synchronous slowest-client wall under
+  stragglers.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig, fl_params, fl_static
+from repro.core import plans as plans_lib
+from repro.core import rounds as rounds_lib
+from repro.data.synthetic import (make_federated, make_population,
+                                  round_batches)
+from repro.models.spec import get_model_spec, meta_for
+from repro.train import fl_driver
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                      "plans_prerefactor.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def fed8():
+    return make_federated(0, "unsw", n_samples=600, n_clients=8)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contract():
+    assert plans_lib.plan_names() == (
+        "client_parallel", "client_serial", "client_cohort",
+        "buffered_async", "hierarchical")
+    # same-family plans share the compiled program; codes pick the lane
+    for name, family, code in [("client_parallel", "client_parallel", 0.0),
+                               ("buffered_async", "client_parallel", 1.0),
+                               ("hierarchical", "client_parallel", 2.0),
+                               ("client_serial", "client_serial", 0.0),
+                               ("client_cohort", "client_cohort", 0.0)]:
+        p = plans_lib.get_plan(name)
+        assert (p.family, p.code) == (family, code)
+        assert plans_lib.plan_for_code(family, code).name == name
+        assert callable(p.builder_fn())
+    # capability flags gate the front doors
+    assert not plans_lib.get_plan("client_serial").driver_capable
+    assert not plans_lib.get_plan("client_cohort").driver_capable
+    assert plans_lib.get_plan("client_cohort").cohort_capable
+    assert not plans_lib.get_plan("buffered_async").cohort_capable
+    assert plans_lib.get_plan("buffered_async").fault_arrivals
+
+
+def test_static_runtime_split_of_plans():
+    fl = FLConfig(plan="buffered_async", async_buffer=4.0)
+    # runtime: the concrete plan is the plan_code lane
+    assert fl_params(fl).plan_code == 1.0
+    assert fl_params(FLConfig()).plan_code == 0.0
+    # static: the name canonicalises to the program family, async knobs
+    # reset to defaults — sync and async configs share one cache entry
+    assert fl_static(fl) == fl_static(FLConfig())
+    assert fl_static(FLConfig(plan="hierarchical")) == fl_static(FLConfig())
+
+
+def test_plan_transient_buffers_routes_through_registry():
+    from repro.core import scale as scale_lib
+    assert scale_lib.plan_transient_buffers("buffered_async") == 2
+    assert scale_lib.plan_transient_buffers("client_parallel") == 0
+    assert scale_lib.plan_transient_buffers("client_cohort") == 0
+
+
+def test_sharding_rules_key_on_family():
+    from repro.models.sharding import make_rules
+    assert make_rules("buffered_async", False) == make_rules(
+        "client_parallel", False)
+    assert make_rules("hierarchical", True) == make_rules(
+        "client_parallel", True)
+    assert make_rules("client_serial", False) != make_rules(
+        "client_parallel", False)
+
+
+# ---------------------------------------------------------------------------
+# Rejection paths
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_plan_rejected_at_config_build():
+    with pytest.raises(ValueError, match="unknown FLConfig.plan"):
+        FLConfig(plan="fedsgd")
+
+
+def test_async_knob_inconsistencies_rejected():
+    with pytest.raises(ValueError, match="async_buffer"):
+        FLConfig(plan="buffered_async")          # needs async_buffer >= 1
+    with pytest.raises(ValueError, match="async_buffer"):
+        FLConfig(plan="client_parallel", async_buffer=3.0)
+    with pytest.raises(ValueError, match="hierarchy_edges"):
+        FLConfig(plan="hierarchical", hierarchy_edges=0)
+
+
+def test_driver_rejects_non_driver_capable_plans(fed8):
+    fl = FLConfig(n_clients=8, plan="client_serial")
+    with pytest.raises(ValueError, match="client_serial"):
+        fl_driver.run_fl(fed8, fl, rounds=2, eval_every=1)
+
+
+def test_population_rejects_non_cohort_capable_plans():
+    pop = make_population(0, n_clients=32, pool_samples=400,
+                          members_per_client=8)
+    for plan, extra in [("buffered_async", {"async_buffer": 4.0}),
+                        ("hierarchical", {}), ("client_serial", {})]:
+        fl = FLConfig(n_clients=32, clients_per_round=4, k_max=4,
+                      plan=plan, **extra)
+        with pytest.raises(ValueError, match="cohort_capable"):
+            fl_driver.run_fl_population(pop, fl, seeds=(0,), rounds=2,
+                                        eval_every=1)
+
+
+def test_population_requires_k_max():
+    with pytest.raises(ValueError, match="k_max"):
+        plans_lib.validate_plan(FLConfig(plan="client_cohort", k_max=0))
+
+
+def test_sweep_rejects_cross_family_cells(fed8):
+    fl = FLConfig(n_clients=8, rounds=2)
+    with pytest.raises(ValueError):
+        fl_driver.run_fl_sweep(fed8, fl, [{"plan": "client_serial"}],
+                               seeds=(0,), rounds=2, eval_every=1)
+
+
+def test_legacy_driver_rejects_async():
+    fed = make_federated(0, "unsw", n_samples=200, n_clients=4)
+    fl = FLConfig(n_clients=4, plan="buffered_async", async_buffer=2.0)
+    with pytest.raises(ValueError, match="run_fl_legacy"):
+        fl_driver.run_fl_legacy(fed, fl, rounds=2, eval_every=1)
+
+
+# ---------------------------------------------------------------------------
+# Golden bitwise pins (pre-refactor capture)
+# ---------------------------------------------------------------------------
+
+
+def test_parallel_plan_bitwise_pinned(golden, fed8):
+    fl = FLConfig(n_clients=8, clients_per_round=3, rounds=6, local_epochs=2,
+                  local_batch=16, local_lr=0.08, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=200.0, dp_clip=5.0,
+                  fault_tolerance=True, failure_prob=0.1)
+    r = fl_driver.run_fl(fed8, fl, "proposed", seed=3, rounds=6, eval_every=2)
+    assert r.history == golden["parallel"]["history"]
+    assert r.sim_time_s == golden["parallel"]["sim_time_s"]
+
+
+def test_serial_plan_bitwise_pinned(golden):
+    fed = make_federated(1, "unsw", n_samples=400, n_clients=6)
+    fl = FLConfig(n_clients=6, clients_per_round=3, rounds=4, local_epochs=2,
+                  local_batch=8, local_lr=0.05, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=100.0, dp_clip=2.0,
+                  plan="client_serial", serial_clients_in_step=3,
+                  fault_tolerance=True, failure_prob=0.1)
+    meta = meta_for(fed, hidden=16)
+    spec = get_model_spec(fl.model, meta)
+    key = jax.random.key(7)
+    params = spec.init(jax.random.fold_in(key, 0))
+    sizes = fed.data_sizes()
+    state = rounds_lib.init_round_state(
+        params, fl, jax.random.fold_in(key, 1), n_clients=fed.n_clients,
+        data_size=jnp.asarray(sizes / sizes.mean()),
+        data_quality=jnp.asarray(fed.label_entropy()))
+    # builder resolved through the registry, as launch/steps.py now does
+    builder = plans_lib.get_plan(fl.plan).builder_fn()
+    assert builder is rounds_lib.make_serial_round
+    step = jax.jit(builder(spec.loss, fl, fed.n_clients))
+    rng = np.random.default_rng(5)
+    g = golden["serial"]
+    for i in range(2):
+        batches = jax.tree.map(jnp.asarray, round_batches(
+            rng, fed, fl.local_epochs, fl.local_batch))
+        batches = jax.tree.map(lambda x: x[: fl.serial_clients_in_step],
+                               batches)
+        state, m = step(state, batches)
+        assert float(m.global_loss) == g["global_loss"][i]
+        assert float(m.k_effective) == g["k_effective"][i]
+        np.testing.assert_array_equal(np.asarray(m.sel_mask),
+                                      np.asarray(g["sel_mask"][i]))
+        np.testing.assert_array_equal(np.asarray(m.update_norms),
+                                      np.asarray(g["norms"][i]))
+
+
+def test_cohort_plan_bitwise_pinned(golden):
+    pop = make_population(0, n_clients=64, pool_samples=600,
+                          members_per_client=16)
+    fl = FLConfig(n_clients=64, clients_per_round=8, k_max=8, rounds=6,
+                  local_epochs=2, local_batch=16, local_lr=0.08,
+                  fault_tolerance=True, failure_prob=0.05)
+    r = fl_driver.run_fl_population(pop, fl, seeds=(0,), rounds=6,
+                                    eval_every=3)[0][0]
+    assert r.history == golden["cohort"]["history"]
+    assert r.sim_time_s == golden["cohort"]["sim_time_s"]
+
+
+def test_fault_sweep_bitwise_pinned(golden, fed8):
+    fl = FLConfig(n_clients=8, clients_per_round=3, rounds=4, local_epochs=2,
+                  local_batch=16, local_lr=0.08, dp_enabled=True,
+                  dp_mode="clipped", dp_epsilon=200.0, dp_clip=5.0,
+                  fault_tolerance=True, failure_prob=0.05)
+    cells = [{"fault_process": 0.0, "failure_prob": 0.3},
+             {"fault_process": 1.0, "failure_prob": 0.3},
+             {"fault_process": 3.0, "failure_prob": 0.3}]
+    sweep = fl_driver.run_fl_sweep(fed8, fl, cells, seeds=(0, 1), rounds=4,
+                                   eval_every=2)
+    for ci, row in enumerate(sweep):
+        for si, r in enumerate(row):
+            assert r.history == golden["sweep"]["histories"][ci][si]
+
+
+# ---------------------------------------------------------------------------
+# New-plan semantics
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_plan_frontier_single_compile(fed8):
+    """(sync, buffered_async, hierarchical) — one compiled program, and the
+    async lane's simulated wall undercuts sync under stragglers."""
+    fl = FLConfig(n_clients=8, clients_per_round=4, rounds=6, local_epochs=2,
+                  local_batch=16, local_lr=0.08, failure_prob=0.2,
+                  fault_process=3.0, straggler_slow=8.0)
+    fl_driver._RUNNER_CACHE.clear()
+    m0 = fl_driver.RUNNER_STATS["misses"]
+    cells = [{}, {"plan": "buffered_async", "async_buffer": 2.0},
+             {"plan": "hierarchical"}]
+    res = fl_driver.run_fl_sweep(fed8, fl, cells, seeds=(0, 1), rounds=6,
+                                 eval_every=2)
+    assert fl_driver.RUNNER_STATS["misses"] - m0 == 1
+    sync_t = [r.sim_time_s for r in res[0]]
+    async_t = [r.sim_time_s for r in res[1]]
+    # K-th arrival (K=2 of 4) never waits for the 8x straggler tail
+    assert all(a < s for a, s in zip(async_t, sync_t))
+    for row in res:
+        for r in row:
+            assert np.isfinite(r.auc) and 0.0 <= r.auc <= 1.0
+
+
+def test_zero_staleness_async_is_sync_fedavg_bitwise(fed8):
+    """async_staleness_pow=0 -> (1+s)^-0.0 == 1.0 exactly (IEEE pow), and
+    with K = cohort the buffer flushes full: every model-path history
+    column must be bitwise the synchronous FedAvg lane.  Only the time
+    model (cum_time) may differ — that is the plan's point."""
+    fl = FLConfig(n_clients=8, clients_per_round=8, rounds=6, local_epochs=2,
+                  local_batch=16, local_lr=0.08, failure_prob=0.1)
+    r_sync = fl_driver.run_fl_sweep(fed8, fl, [{}], seeds=(0,), rounds=6,
+                                    eval_every=2)[0][0]
+    r_async = fl_driver.run_fl_sweep(
+        fed8, fl, [{"plan": "buffered_async", "async_buffer": 8.0,
+                    "async_staleness_pow": 0.0}],
+        seeds=(0,), rounds=6, eval_every=2)[0][0]
+    for col in ("acc", "auc", "loss", "k", "fail"):
+        assert r_sync.history[col] == r_async.history[col], col
+    assert r_sync.history["cum_time"] != r_async.history["cum_time"]
+
+
+def test_staleness_discount_changes_aggregation(fed8):
+    """A positive staleness power down-weights late arrivals — the async
+    lane's trained model must actually diverge from sync FedAvg."""
+    fl = FLConfig(n_clients=8, clients_per_round=8, rounds=6, local_epochs=2,
+                  local_batch=16, local_lr=0.08, failure_prob=0.1)
+    r_sync = fl_driver.run_fl_sweep(fed8, fl, [{}], seeds=(0,), rounds=6,
+                                    eval_every=2)[0][0]
+    r_async = fl_driver.run_fl_sweep(
+        fed8, fl, [{"plan": "buffered_async", "async_buffer": 2.0,
+                    "async_staleness_pow": 1.0}],
+        seeds=(0,), rounds=6, eval_every=2)[0][0]
+    assert r_sync.history["loss"] != r_async.history["loss"]
+
+
+def test_hierarchical_single_edge_matches_flat():
+    """E=1 collapses the two-tier tree: the lone edge computes the same
+    weighted mean as flat FedAvg and the cloud averages one live edge, so
+    the hierarchical lane must reproduce the flat trajectory (scatter-add
+    vs jnp.sum reduction order aside) while paying the cheaper two-hop
+    edge communication.  With E>1 and heterogeneous data sizes the cloud's
+    UNWEIGHTED edge mean genuinely diverges from FedAvg — that is the
+    plan's semantics, covered by test_staleness/mixed-frontier sanity."""
+    fed = make_federated(2, "unsw", n_samples=600, n_clients=8)
+    fl = FLConfig(n_clients=8, clients_per_round=8, rounds=4, local_epochs=2,
+                  local_batch=16, local_lr=0.08, failure_prob=0.0,
+                  hierarchy_edges=1)
+    r_flat = fl_driver.run_fl_sweep(fed, fl, [{}], seeds=(0,), rounds=4,
+                                    eval_every=2)[0][0]
+    r_hier = fl_driver.run_fl_sweep(
+        fed, fl, [{"plan": "hierarchical"}], seeds=(0,), rounds=4,
+        eval_every=2)[0][0]
+    np.testing.assert_allclose(np.asarray(r_hier.history["loss"]),
+                               np.asarray(r_flat.history["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r_hier.history["auc"]),
+                               np.asarray(r_flat.history["auc"]), atol=1e-5)
+    # and the hierarchical time model is cheaper than the flat WAN hop
+    assert r_hier.sim_time_s < r_flat.sim_time_s
+
+
+def test_async_time_model_kth_arrival():
+    """Direct simulate_round_time pin: the async wall is the K-th smallest
+    selected arrival + comm, the sync wall the slowest + comm + FT terms."""
+    from repro.core.selection import init_utility_state
+    n = 6
+    fl_sync = FLConfig(n_clients=n, fault_tolerance=False, dp_enabled=False)
+    fl_async = FLConfig(n_clients=n, plan="buffered_async", async_buffer=2.0,
+                        fault_tolerance=False, dp_enabled=False)
+    util = init_utility_state(n, jax.random.key(0))
+    util = util._replace(compute=jnp.ones((n,), jnp.float32))
+    sel = jnp.ones((n,), jnp.float32)
+    failed = jnp.zeros((n,), jnp.float32)
+    slow = jnp.asarray([1.0, 1.0, 1.0, 1.0, 1.0, 10.0], jnp.float32)
+    t_sync = float(fl_driver.simulate_round_time(fl_sync, util, sel, failed,
+                                                 slow=slow))
+    t_async = float(fl_driver.simulate_round_time(fl_async, util, sel, failed,
+                                                  slow=slow))
+    base = fl_sync.local_epochs * 0.02
+    comm = 0.35 * (1.0 + 64.0 / 1024.0)
+    assert t_sync == pytest.approx(10.0 * base + comm)
+    assert t_async == pytest.approx(base + comm)  # 2nd arrival of 5 fast
+
+    fl_hier = FLConfig(n_clients=n, plan="hierarchical",
+                       fault_tolerance=False, dp_enabled=False)
+    t_hier = float(fl_driver.simulate_round_time(fl_hier, util, sel, failed,
+                                                 slow=slow))
+    assert t_hier == pytest.approx(10.0 * base + 2.0 * 0.3 * comm)

@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""Schema-validate the seven legacy ``BENCH_*.json`` artifacts.
+"""Schema-validate the eight legacy ``BENCH_*.json`` artifacts.
 
 The JSON snapshots are the benches' compatibility surface: docs cite their
 numbers and tools/bench_regress.py's legacy import path reads their gate
@@ -97,6 +97,21 @@ SCHEMAS = {
         "coupling_gate.gated": bool,
         "ft_ablation.p_value": NUM,
         "ft_ablation.gated": bool,
+    },
+    "BENCH_async.json": {
+        "mode": str,
+        "config.n_lanes": int,
+        "frontier.warm_execute_s_min": NUM,
+        "frontier.warm_execute_s_all[]": NUM,
+        "frontier.runner_compiles": int,
+        "frontier.cells[].plan": str,
+        "frontier.cells[].fault": str,
+        "frontier.cells[].auc_mean": NUM,
+        "frontier.cells[].sim_time_mean": NUM,
+        "async_gate.mannwhitney_u": NUM,
+        "async_gate.p_value_time": NUM,
+        "async_gate.async_beats_sync": bool,
+        "async_gate.gated": bool,
     },
     "BENCH_scale.json": {
         "engine_rev": str,

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Print a metric's trajectory across ENGINE_REV from the experiment store.
+
+The ROADMAP's promised report: the regression gate (tools/bench_regress.py)
+compares within one engine revision on purpose, so this is the
+complementary view — follow one metric (AUC, warm wall, a hillclimb
+roofline term) through engine rewrites, each point labelled with the rev
+that produced it.
+
+Usage:
+  PYTHONPATH=src python tools/metric_trajectory.py --bench fault \\
+      --metric auc_mean [--lane iid@0.30] [--store PATH]
+
+Without --lane, every lane of the bench is reported.  Exit 0 always —
+this is a report, not a gate.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs.store import ExperimentStore, default_store_path  # noqa: E402
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", required=True)
+    ap.add_argument("--metric", default="auc_mean")
+    ap.add_argument("--lane", default=None,
+                    help="one lane_key (default: every lane of the bench)")
+    ap.add_argument("--store", default=None,
+                    help="sqlite path (default: REPRO_STORE or "
+                         "benchmarks/artifacts/experiments.sqlite)")
+    args = ap.parse_args()
+
+    path = args.store or default_store_path()
+    if not os.path.exists(path):
+        print(f"no experiment store at {path} — run a bench first")
+        return 0
+    store = ExperimentStore(path)
+    if args.lane:
+        traj = store.metric_trajectory(args.bench, args.lane, args.metric)
+        print(f"== {args.bench}/{args.lane}: {args.metric} across "
+              "ENGINE_REV ==")
+        prev = None
+        for run_id, rev, v in traj:
+            delta = "" if prev is None else f"  ({v - prev:+.4f})"
+            print(f"  run {run_id:>4d} [{rev or '?':>10s}]  {v:.4f}{delta}")
+            prev = v
+        if not traj:
+            print(f"  (no stored cells carry metric {args.metric!r})")
+    else:
+        print(store.trajectory_report(args.bench, args.metric))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
