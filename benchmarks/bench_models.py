@@ -6,7 +6,9 @@ A model × seed grid on both workload families, written to
 * ``unsw`` — the paper's tabular flow features (flattened MLP);
 * ``road_raw`` — raw CAN windows (``feature_shape=(window, signals)``):
   the flattened MLP baseline vs the window-native detectors
-  (``models/detectors.py``: 1-D CNN + RG-LRU recurrent).
+  (``models/detectors.py``: 1-D CNN, RG-LRU recurrent, and — ISSUE 10 —
+  the kernel-routed sequence substrate: Mamba-2 SSD ``ssm`` and causal
+  self-attention ``attn``).
 
 Hard assertions:
 
@@ -17,7 +19,10 @@ Hard assertions:
 * **window-native wins on windows** — on ``road_raw`` the best
   window-native detector's mean AUC must match or beat the flattened
   MLP's (the structure the MLP destroys is the ROAD signal; gated in full
-  mode, recorded always).
+  mode, recorded always);
+* **sequence beats CNN** (ISSUE 10) — at least one sequence detector
+  (``ssm``/``attn``) must beat the CNN's mean AUC on ``road_raw`` under
+  the identical FL protocol (gated in full mode, recorded always).
 
 Timing protocol (repo memory: very noisy wall clocks): per-cell walls are
 warm min-of-N via ``benchmarks/common.warm_min`` — compile happens before
@@ -58,12 +63,20 @@ WARM_N = 1 if SMOKE else 2
 
 # (dataset, model) grid: the MLP baseline runs on both workloads, the
 # window-native detectors only on raw windows (they reject tabular meta).
+# ISSUE 10 grows the model axis with the sequence substrate: the Mamba-2
+# SSD detector and the causal-attention detector, both kernel-routed.
 GRID = (
     ("unsw", "mlp"),
     ("road_raw", "mlp"),
     ("road_raw", "cnn"),
     ("road_raw", "rglru"),
+    ("road_raw", "ssm"),
+    ("road_raw", "attn"),
 )
+
+# the sequence-substrate gate (ISSUE 10): at least one sequence detector
+# must beat the PR 4 CNN on road_raw under the identical FL protocol
+SEQUENCE_MODELS = ("ssm", "attn")
 
 
 def _bench_fl(**kw) -> FLConfig:
@@ -129,6 +142,9 @@ def run(csv_rows: list) -> dict:
             if c["dataset"] == "road_raw"}
     best_window = max(road[m] for m in ("cnn", "rglru"))
     auc_gate = bool(best_window >= road["mlp"] - 0.01)
+    best_seq_model = max(SEQUENCE_MODELS, key=lambda m: road[m])
+    best_sequence = road[best_seq_model]
+    seq_gate = bool(best_sequence > road["cnn"])
 
     report = {
         "mode": mode,
@@ -141,6 +157,10 @@ def run(csv_rows: list) -> dict:
         "road_raw_auc": {"mlp_flattened": road["mlp"],
                          "best_window_native": best_window,
                          "window_native_matches_or_beats_mlp": auc_gate,
+                         "cnn": road["cnn"],
+                         "best_sequence": best_sequence,
+                         "best_sequence_model": best_seq_model,
+                         "sequence_beats_cnn": seq_gate,
                          "gated": not SMOKE},
     }
     with open(OUT, "w") as f:
@@ -163,6 +183,10 @@ def run(csv_rows: list) -> dict:
           f"flattened mlp {road['mlp']:.3f} -> "
           f"{'OK' if auc_gate else 'FAIL'}"
           f"{' (not gated in smoke)' if SMOKE else ''}")
+    print(f"  road_raw: best sequence auc {best_sequence:.3f} "
+          f"({best_seq_model}) vs cnn {road['cnn']:.3f} -> "
+          f"{'OK' if seq_gate else 'FAIL'}"
+          f"{' (not gated in smoke)' if SMOKE else ''}")
     print(f"  -> {os.path.abspath(OUT)}")
     return report
 
@@ -174,3 +198,8 @@ if __name__ == "__main__":
         raise SystemExit(
             "models gate failed: no window-native detector matched the "
             "flattened MLP's AUC on road_raw")
+    if report["road_raw_auc"]["gated"] and \
+            not report["road_raw_auc"]["sequence_beats_cnn"]:
+        raise SystemExit(
+            "models gate failed: no sequence detector (ssm/attn) beat the "
+            "CNN's AUC on road_raw")

@@ -93,26 +93,52 @@ def cohort_batch_bytes(k_max: int, local_steps: int, batch: int,
     return k_max * local_steps * batch * (n_features * _F32 + _I32)
 
 
+# Replicated model-parameter budget (bytes, per lane).  A detector whose
+# ``ModelSpec.param_bytes()`` stays under this replicates across the scale
+# mesh like the PR 6 design assumed ("the detectors are tiny relative to
+# the population state"); above it the driver installs the
+# RULES_MODEL_SCALE sharding context so the spec's declared ``param_axes``
+# tensor-parallel over the ``client`` axis.  The default is deliberately
+# generous for the builtin zoo (all ≤ ~100 KiB — they replicate); override
+# per call (``run_fl_population(model_replicated_max_bytes=...)``) to force
+# the sharded program, as the parity test does.
+MODEL_REPLICATED_MAX_BYTES = 4 << 20
+
+
+def model_needs_sharding(param_bytes: int,
+                         max_bytes: int | None = None) -> bool:
+    """True when a model's replicated parameter footprint exceeds the
+    replicated-size budget and its parameters should shard via the
+    ``ModelSpec.param_axes`` hook."""
+    budget = MODEL_REPLICATED_MAX_BYTES if max_bytes is None else max_bytes
+    return param_bytes > budget
+
+
 def population_resident_bytes(n_clients: int, members_per_client: int,
-                              n_lanes: int = 1) -> int:
+                              n_lanes: int = 1, model_bytes: int = 0) -> int:
     """Everything that must stay resident per device (data shared across
-    lanes + one carry per lane)."""
+    lanes + one carry per lane + one model replica per lane — pass the
+    spec's ``param_bytes()`` as ``model_bytes``; 0 keeps the pre-model
+    accounting for callers that only budget the population state)."""
     return (population_data_bytes(n_clients, members_per_client)
-            + n_lanes * population_carry_bytes(n_clients))
+            + n_lanes * population_carry_bytes(n_clients)
+            + n_lanes * model_bytes)
 
 
 def auto_chunks(n_clients: int, budget_bytes: int,
-                members_per_client: int, n_lanes: int = 1) -> int:
+                members_per_client: int, n_lanes: int = 1,
+                model_bytes: int = 0) -> int:
     """Selection-chunk count that fits ``budget_bytes`` per device.
 
-    The resident arrays (membership + carries) are irreducible — if they
-    alone overflow the budget this raises, because no chunking policy can
-    fix a population whose *state* does not fit (shard the client axis
-    over more devices instead).  Otherwise the selection transients are
-    chunked into whatever budget remains, floored at one chunk.
+    The resident arrays (membership + carries + model replicas) are
+    irreducible — if they alone overflow the budget this raises, because
+    no chunking policy can fix a population whose *state* does not fit
+    (shard the client axis over more devices instead).  Otherwise the
+    selection transients are chunked into whatever budget remains,
+    floored at one chunk.
     """
     resident = population_resident_bytes(n_clients, members_per_client,
-                                         n_lanes)
+                                         n_lanes, model_bytes)
     if resident >= budget_bytes:
         raise ValueError(
             f"population resident state ({resident} B) exceeds the "

@@ -52,8 +52,15 @@ def flash_decode(q, k, v, length, *, interpret: Optional[bool] = None,
 combine_decode_partials = _fd.combine_partials
 
 
-def rglru_scan(a, x, h0=None, *, interpret: bool = True):
-    return _rg.rglru_scan(a, x, h0, interpret=interpret)
+def rglru_scan(a, x, h0=None, *, interpret: Optional[bool] = None):
+    """``interpret=None`` (default) auto-routes by backend: compiled Pallas
+    on TPU, interpret mode elsewhere — same resolve as the flash kernels.
+    The sequential chunked scan is bitwise-equal to
+    ``kernels.ref.rglru_scan_ref`` (asserted in tests/test_kernels.py), so
+    the ``"kernel"``/``"ref"`` score routes of the sequence detectors agree
+    to the bit."""
+    return _rg.rglru_scan(a, x, h0,
+                          interpret=_fd.resolve_interpret(interpret))
 
 
 def dp_clip_noise(x, noise, clip: float, sigma: float, *, interpret: bool = True):

@@ -14,9 +14,22 @@ for the generic data path; the specs unflatten via ``DataMeta
   time, which matches the attack's arbitrary replay shift.
 * ``rglru`` — a small recurrent detector on the existing RG-LRU substrate
   (``models/rglru.py``, the RecurrentGemma/Griffin block — input
-  projection, gated linear recurrence via ``associative_scan``, gelu gate,
-  output projection), mean+last pooled.  Exercises the repo's
-  recurrent/SSM machinery on the anomaly workload.
+  projection, gated linear recurrence, gelu gate, output projection),
+  mean+last pooled.  ROUTED (ISSUE 10): the ``"kernel"`` route runs the
+  ``rglru_scan`` Pallas chunked scan (``rglru_block(impl="flash")``), the
+  ``"ref"`` route the model-level ``associative_scan`` — both compute the
+  same recurrence, by different parallel decompositions.
+* ``ssm`` — a Mamba-2 detector on the SSD substrate (``models/ssm.py``,
+  ISSUE 10): embed the window's signals, one ``ssd_block`` mixer
+  (chunked state-space duality over the window axis, small-dt init),
+  residual, mean+last+max pooled; the score path averages two circular
+  time-rolls of the window (stationary signals — a rolled window is a
+  valid second view).  ROUTED through the same contract: the inter-chunk
+  recurrence is exactly the RG-LRU scan's ``h = a·h + x`` form
+  (``ssm.chunk_scan_via``), so the ``"kernel"`` route rides the
+  ``rglru_scan`` Pallas kernel and the ``"ref"`` route the sequential
+  ``kernels/ref`` oracle — both sequential f32 scans, bitwise-equal
+  (tests/test_kernels.py).
 * ``attn`` — a causal self-attention detector (ISSUE 7) whose score path
   is ROUTED: one causal attention block over the window plus a
   learned-query read-out that is exactly a one-token decode against the
@@ -47,6 +60,7 @@ from repro.kernels import ref as kref
 from repro.models.layers import fan_in_init
 from repro.models import rglru as rglru_lib
 from repro.models import spec as spec_lib
+from repro.models import ssm as ssm_lib
 from repro.models.sharding import split_meta
 
 _CONV_DN = ("NWC", "WIO", "NWC")  # [b, window, ch] / [k, in, out]
@@ -142,19 +156,158 @@ def _build_rglru(meta: spec_lib.DataMeta) -> spec_lib.ModelSpec:
                      "b": jnp.zeros((meta.n_classes,), jnp.float32)},
         }
 
-    def logits(params, x):
-        h = _unflatten(x, meta)                       # [b, window, signals]
-        h = h @ params["embed"]["w"] + params["embed"]["b"]  # [b, l, d]
-        rec, _ = rglru_lib.rglru_block(params["rec"], h, cfg)
-        h = h + rec                                    # residual
-        pooled = jnp.concatenate([h.mean(axis=1), h[:, -1]], axis=-1)
-        return pooled @ params["head"]["w"] + params["head"]["b"]
+    def make_logits(impl: str):
+        def logits(params, x):
+            h = _unflatten(x, meta)                   # [b, window, signals]
+            h = h @ params["embed"]["w"] + params["embed"]["b"]  # [b, l, d]
+            rec, _ = rglru_lib.rglru_block(params["rec"], h, cfg, impl=impl)
+            h = h + rec                                # residual
+            pooled = jnp.concatenate([h.mean(axis=1), h[:, -1]], axis=-1)
+            return pooled @ params["head"]["w"] + params["head"]["b"]
+
+        return logits
+
+    # "ref" is the model-level associative_scan (the pre-ISSUE-10 math, so
+    # the build-time default on CPU is byte-identical to PR 4); "kernel"
+    # rides the rglru_scan Pallas chunked scan.
+    variants = {"kernel": make_logits("flash"), "ref": make_logits("ref")}
+    ref_logits = variants["ref"]
 
     def loss(params, batch):
-        return spec_lib.cross_entropy(logits(params, batch["x"]), batch["y"])
+        return spec_lib.cross_entropy(ref_logits(params, batch["x"]),
+                                      batch["y"])
 
     return spec_lib.ModelSpec(name="rglru", init=init, loss=loss,
-                              logits=logits)
+                              logits=variants[kops.default_route()],
+                              route_variants=variants)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) detector on the chunked state-space substrate
+# ---------------------------------------------------------------------------
+
+
+class _SsmCfg(NamedTuple):
+    """Duck-typed stand-in for the ModelConfig fields ``models/ssm.py``
+    reads (ssd_dims / ssd_block)."""
+
+    d_model: int
+    ssm_expand: int
+    ssm_heads: int
+    ssm_head_dim: int
+    ssm_state: int
+    ssm_chunk: int
+    conv_width: int
+    norm_eps: float
+    dtype: str
+
+
+def _ssd_scan_fn(route: str):
+    """Routed inter-chunk state recurrence for :func:`ssm.ssd_chunked`.
+
+    Both routes run the SAME sequential f32 scan ``s = dec·s + st`` over
+    the flattened chunk states; ``kernel`` through the ``rglru_scan``
+    Pallas kernel (backend-resolved interpret mode), ``ref`` through the
+    ``kernels/ref`` jnp oracle — bitwise-equal, asserted in
+    tests/test_kernels.py.  ``loss`` always uses the ref route (the Pallas
+    forward has no VJP).
+    """
+    if route == "kernel":
+        return ssm_lib.chunk_scan_via(kops.rglru_scan)
+    if route == "ref":
+        return ssm_lib.chunk_scan_via(kref.rglru_scan_ref)
+    raise KeyError(route)
+
+
+def _build_ssm(meta: spec_lib.DataMeta) -> spec_lib.ModelSpec:
+    _require_windowed(meta, "ssm")
+    window, n_signals = meta.feature_shape[0], meta.feature_shape[-1]
+    d = max(16, meta.hidden // 4)
+    # chunked SSD needs the window to split into equal chunks; several
+    # chunks (not one) so the inter-chunk recurrence — the routed kernel —
+    # actually carries state.  The kernel's lane width h·p·n = 512 divides
+    # its bw tile exactly.
+    chunk = next(c for c in (16, 8, 4, 2, 1) if window % c == 0)
+    cfg = _SsmCfg(d_model=d, ssm_expand=2, ssm_heads=2,
+                  ssm_head_dim=d, ssm_state=16, ssm_chunk=chunk,
+                  conv_width=4, norm_eps=1e-6, dtype="float32")
+    # score path averages logits over circular time-rolls of the window —
+    # the signals are stationary (AR(1) + sinusoid driver) and the
+    # masquerade replaces a whole signal, so a rolled window is a valid
+    # second view of the same class; averaging the two views is worth
+    # ~+0.01 AUC at the bench protocol.  Training stays single-view.
+    tta_rolls = (0, window // 2) if window >= 2 else (0,)
+
+    def init(key):
+        k1, k3, k2 = jax.random.split(key, 3)
+        mix = dict(split_meta(ssm_lib.init_ssd(k2, cfg))[0])
+        # slow dynamics at init: the substrate's dt_bias=0 gives
+        # dt = softplus(0) ≈ 0.69, i.e. a per-step decay exp(-A·0.69)
+        # with half-life under one step even for the slowest head — no
+        # temporal memory over a 64-step window.  dt_bias = -2
+        # (dt ≈ 0.12) starts the heads with usable 8–60-step memory
+        # (the standard Mamba small-dt init).
+        mix["dt_bias"] = jnp.full_like(mix["dt_bias"], -2.0)
+        return {
+            "embed": {"w": fan_in_init(k1, (n_signals, d), jnp.float32),
+                      "b": jnp.zeros((d,), jnp.float32)},
+            "mix": mix,
+            "head": {"w": fan_in_init(k3, (3 * d, meta.n_classes),
+                                      jnp.float32),
+                     "b": jnp.zeros((meta.n_classes,), jnp.float32)},
+        }
+
+    def make_one_view(route: str):
+        scan_fn = _ssd_scan_fn(route)
+
+        def one_view(params, hw):
+            h = hw @ params["embed"]["w"] + params["embed"]["b"]  # [b, l, d]
+            y, _ = ssm_lib.ssd_block(params["mix"], h, cfg, scan_fn=scan_fn)
+            h = h + y                                  # residual
+            pooled = jnp.concatenate(
+                [h.mean(axis=1), h[:, -1], h.max(axis=1)], axis=-1)
+            return pooled @ params["head"]["w"] + params["head"]["b"]
+
+        return one_view
+
+    def make_logits(route: str):
+        one_view = make_one_view(route)
+
+        def logits(params, x):
+            hw = _unflatten(x, meta)                  # [b, window, signals]
+            views = [one_view(params,
+                              jnp.roll(hw, r, axis=1) if r else hw)
+                     for r in tta_rolls]
+            return sum(views) / len(views)
+
+        return logits
+
+    variants = {"kernel": make_logits("kernel"), "ref": make_logits("ref")}
+    ref_one_view = make_one_view("ref")
+
+    def loss(params, batch):
+        # always the differentiable ref math (Pallas forwards have no
+        # VJP), single view — the roll averaging is a score-path device
+        return spec_lib.cross_entropy(
+            ref_one_view(params, _unflatten(batch["x"], meta)),
+            batch["y"])
+
+    def param_axes():
+        # the SSD substrate's ParamMeta axes, recovered shape-free; the
+        # wide "mlp" dims (fused in_proj, conv channels, out_proj rows)
+        # are what RULES_MODEL_SCALE tensor-parallels over `client`.
+        mix_axes = split_meta(jax.eval_shape(
+            lambda: ssm_lib.init_ssd(jax.random.key(0), cfg)))[1]
+        return {
+            "embed": {"w": (None, "embed"), "b": ("embed",)},
+            "mix": mix_axes,
+            "head": {"w": (None, None), "b": (None,)},
+        }
+
+    return spec_lib.ModelSpec(name="ssm", init=init, loss=loss,
+                              logits=variants[kops.default_route()],
+                              route_variants=variants,
+                              param_axes=param_axes)
 
 
 # ---------------------------------------------------------------------------
@@ -237,11 +390,24 @@ def _build_attn(meta: spec_lib.DataMeta) -> spec_lib.ModelSpec:
         return spec_lib.cross_entropy(ref_logits(params, batch["x"]),
                                       batch["y"])
 
+    def param_axes():
+        qkv = ("embed", "heads")
+        return {
+            "embed": {"w": (None, "embed"), "b": ("embed",)},
+            "pos": (None, "embed"),
+            "wq": qkv, "wk": qkv, "wv": qkv, "wo": ("heads", "embed"),
+            "rq": ("heads", None),
+            "rkv": {"wk": qkv, "wv": qkv},
+            "head": {"w": (None, None), "b": (None,)},
+        }
+
     return spec_lib.ModelSpec(name="attn", init=init, loss=loss,
                               logits=variants[kops.default_route()],
-                              route_variants=variants)
+                              route_variants=variants,
+                              param_axes=param_axes)
 
 
 spec_lib.register_model("cnn", _build_cnn)
 spec_lib.register_model("rglru", _build_rglru)
+spec_lib.register_model("ssm", _build_ssm)
 spec_lib.register_model("attn", _build_attn)

@@ -31,11 +31,28 @@ def effective_window(cfg: ModelConfig, shape: Optional[ShapeConfig]) -> Optional
     For ``long_500k`` full-attention archs run their explicitly-labeled
     sliding-window variant (DESIGN.md §5); all other shapes use the published
     attention (cfg.sliding_window, usually None).
+
+    An attention-family config that reaches ``long_500k`` with no window
+    anywhere — no ``sliding_window``, no ``swa-*`` long-context variant,
+    and a family that does not support long context — is a config error:
+    it would silently lower full O(L²) attention over 524288 positions.
+    Rejected here, which is config-build time (``input_specs`` /
+    ``build_train_step`` both resolve the window before any compile).
     """
     if shape is not None and shape.name == "long_500k" and cfg.family != "ssm":
         if cfg.sliding_window is not None:
             return cfg.sliding_window
-        return parse_long_variant(cfg)
+        window = parse_long_variant(cfg)
+        if window is None and not cfg.supports_long_context():
+            raise ValueError(
+                f"arch {cfg.name!r} (family {cfg.family!r}) cannot run the "
+                "long_500k shape: it has no sliding_window, no 'swa-*' "
+                "long_context_variant, and its family does not support "
+                "long context — full attention over 524288 positions is "
+                "never intended.  Label the config with "
+                "long_context_variant='swa-<window>' or pick an "
+                "ssm/hybrid arch")
+        return window
     return cfg.sliding_window
 
 

@@ -152,6 +152,29 @@ RULES_POPULATION = {
     "lanes": ("lane",),
 }
 
+# Model-sharding variant for the same scale mesh: when a detector exceeds
+# the replicated-size budget (core/scale.py::model_needs_sharding), its
+# wide parameter axes ("mlp"/"heads" — the SSD fused projection, attention
+# QKV) tensor-parallel over the ``client`` axis while the residual-stream
+# dims replicate.  The per-client population arrays keep their RULES_
+# POPULATION placement; ``ModelSpec.param_axes`` +
+# ``shardctx.sharding_ctx(RULES_MODEL_SCALE, mesh)`` is the whole hook —
+# the driver installs the context, the spec declares the axes, and
+# ``sanitize_pspec`` drops any partition the dims don't divide.
+RULES_MODEL_SCALE = {
+    **RULES_POPULATION,
+    "embed": None,
+    "mlp": ("client",),
+    "heads": ("client",),
+    "kv": None,
+    "vocab": None,
+    "experts": None,
+    "layers": None,
+    "act_batch": None,
+    "act_seq": None,
+    "ssm_state": None,
+}
+
 
 def population_shardings(mesh: Mesh, pop):
     """Shardings for a :class:`repro.data.synthetic.Population` on a

@@ -30,6 +30,7 @@ window-native ROAD detectors in ``models/detectors.py`` (``cnn``,
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Dict, Mapping, NamedTuple, Optional, Tuple
 
@@ -82,12 +83,22 @@ class ModelSpec:
       pre-spec engine.
     * ``route_variants`` — optional per-route logits functions for specs
       whose score path has a Pallas-kernel route next to the pure-jnp
-      ``kernels/ref`` one (the sequence detector in ``models/detectors.py``:
-      ``"kernel"`` → flash_attention/flash_decode, ``"ref"`` → the ref
-      oracles).  ``logits`` stays the build-time default route, so every
-      existing call site is untouched; the serving engine (``repro/serve``)
-      and tests select a route explicitly via :meth:`logits_routed` /
-      :meth:`predict_proba_routed`.
+      ``kernels/ref`` one (the sequence detectors in
+      ``models/detectors.py``: ``attn`` → flash_attention/flash_decode,
+      ``ssm``/``rglru`` → ``rglru_scan``).  ``logits`` stays the build-time
+      default route, so every existing call site is untouched; the serving
+      engine (``repro/serve``) and tests select a route explicitly via
+      :meth:`logits_routed` / :meth:`predict_proba_routed`.
+    * ``param_axes`` — the sharding hook: an optional thunk returning a
+      pytree of logical-axis tuples, one tuple per ``init`` leaf (prefix
+      structure is fine — ``jax.tree`` semantics).  The training driver
+      calls :meth:`constrain_params` on freshly-initialised params; under
+      an active ``models/shardctx`` context the logical axes resolve
+      through the installed rules/mesh into GSPMD sharding constraints,
+      outside any context it is a no-op — so the spec declares WHERE its
+      parameters may shard and the driver decides WHEN (model exceeds the
+      replicated-size budget, ``core/scale.py``), with zero effect on
+      unsharded programs.
     """
 
     name: str
@@ -95,6 +106,7 @@ class ModelSpec:
     loss: Callable
     logits: Callable
     route_variants: Optional[Mapping[str, Callable]] = None
+    param_axes: Optional[Callable[[], object]] = None
 
     def logits_routed(self, route: Optional[str] = None) -> Callable:
         """Logits function on an explicit kernel route.  ``None`` resolves
@@ -121,6 +133,33 @@ class ModelSpec:
     def accuracy(self, params, x, y) -> jnp.ndarray:
         pred = jnp.argmax(self.logits(params, x), axis=-1)
         return jnp.mean((pred == y).astype(jnp.float32))
+
+    def param_bytes(self) -> int:
+        """Replicated parameter footprint (bytes), via ``jax.eval_shape`` —
+        no arrays are materialised.  ``core/scale.py`` compares this against
+        the replicated-size budget to decide model sharding."""
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        return sum(
+            int(math.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+            for l in jax.tree.leaves(shapes)
+        )
+
+    def constrain_params(self, params):
+        """Apply the spec's ``param_axes`` as sharding constraints through
+        the active ``models/shardctx`` context.  Identity when the spec
+        declares no axes or no context is installed (the lowered program is
+        unchanged — bitwise-neutral for every unsharded path)."""
+        if self.param_axes is None:
+            return params
+        from repro.models import shardctx
+        if not shardctx.active():
+            return params
+        axes = self.param_axes()
+        treedef = jax.tree.structure(params)
+        axes_flat = treedef.flatten_up_to(axes)
+        out = [shardctx.constrain(p, *a)
+               for p, a in zip(jax.tree.leaves(params), axes_flat)]
+        return jax.tree.unflatten(treedef, out)
 
 
 def cross_entropy(logits, y):

@@ -92,11 +92,42 @@ def _project(params, x, cfg):
     return z, xbc, dt
 
 
-def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
+def chunk_scan_via(linear_scan):
+    """Adapt an ``(a, x, h0) -> (hs, h_last)`` diagonal linear-recurrence
+    primitive (``kernels.ops.rglru_scan`` or ``kernels.ref.rglru_scan_ref``)
+    into the inter-chunk state scan of :func:`ssd_chunked`.
+
+    The chunk recurrence ``s_new = s * dec + st`` is elementwise over the
+    flattened [h*p*n] state with the per-chunk decay broadcast over (p, n) —
+    exactly the RG-LRU scan's ``h = a·h + x`` form, so the Pallas kernel
+    serves both sequence families.  Returns a ``scan_fn`` with the
+    ``(chunk_decay [b,nc,h], states [b,nc,h,p,n], s0 [b,h,p,n]) ->
+    (final_state, prev_states)`` contract ``ssd_chunked`` expects.
+    """
+
+    def scan_fn(chunk_decay, states, s0):
+        b, nc, h, p, n = states.shape
+        w = h * p * n
+        a = jnp.broadcast_to(
+            chunk_decay[:, :, :, None, None], states.shape
+        ).reshape(b, nc, w)
+        hs, h_last = linear_scan(a, states.reshape(b, nc, w), s0.reshape(b, w))
+        # scan contract returns the state BEFORE each chunk's update
+        prev = jnp.concatenate([s0.reshape(b, 1, w), hs[:, :-1]], axis=1)
+        return h_last.reshape(b, h, p, n), prev.reshape(b, nc, h, p, n)
+
+    return scan_fn
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None, scan_fn=None):
     """Chunked SSD scan.
 
     x: [b, l, h, p]; dt: [b, l, h]; A: [h] (positive, used as -A);
     B, C: [b, l, n].  Returns (y [b,l,h,p], final_state [b,h,p,n]).
+
+    ``scan_fn`` (default None = the inline ``lax.scan``) swaps the
+    inter-chunk state recurrence for a routed implementation (see
+    :func:`chunk_scan_via`); the quadratic intra-chunk math is shared.
     """
     b, l, h, p = x.shape
     n = B.shape[-1]
@@ -130,17 +161,21 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
         else init_state.astype(jnp.float32)
     )
 
-    def step(s, inp):
-        dec, st = inp
-        s_new = s * dec[:, :, None, None] + st
-        return s_new, s
+    if scan_fn is None:
 
-    (final_state, prev_states) = jax.lax.scan(
-        step,
-        s0,
-        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
-    )
-    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,nc,h,p,n]
+        def step(s, inp):
+            dec, st = inp
+            s_new = s * dec[:, :, None, None] + st
+            return s_new, s
+
+        (final_state, prev_states) = jax.lax.scan(
+            step,
+            s0,
+            (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+        )
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,nc,h,p,n]
+    else:
+        final_state, prev_states = scan_fn(chunk_decay, states, s0)
 
     # inter-chunk contribution
     state_decay = jnp.exp(dA_cum)  # decay from chunk start to position i
@@ -150,10 +185,13 @@ def ssd_chunked(x, dt, A, B, C, chunk: int, init_state=None):
     return y, final_state
 
 
-def ssd_block(params, x, cfg, state=None):
+def ssd_block(params, x, cfg, state=None, scan_fn=None):
     """Full Mamba-2 mixer.  x: [b, l, d] -> ([b, l, d], cache).
 
     cache = {"ssm": [b,h,p,n] f32, "conv": [b, k-1, d_in+2n]}
+
+    ``scan_fn`` threads through to :func:`ssd_chunked` (routed inter-chunk
+    recurrence; None keeps the inline ``lax.scan``).
     """
     d_in, h, p, n = ssd_dims(cfg)
     z, xbc, dt = _project(params, x, cfg)
@@ -164,7 +202,8 @@ def ssd_block(params, x, cfg, state=None):
     C = xbc[..., d_in + n :].astype(jnp.float32)
     A = jnp.exp(params["A_log"])  # [h] positive
     init_state = state["ssm"] if state is not None else None
-    y, final = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk, init_state)
+    y, final = ssd_chunked(xs, dt, A, B, C, cfg.ssm_chunk, init_state,
+                           scan_fn=scan_fn)
     y = y + params["D"][None, None, :, None] * xs
     y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
     y = y * jax.nn.silu(z)

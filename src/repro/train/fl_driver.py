@@ -60,6 +60,7 @@ ride inside the scan carry.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -82,6 +83,7 @@ from repro.data.synthetic import (FederatedData, Population,
                                   sample_cohort_batches,
                                   sample_round_batches, stack_federation)
 from repro.launch.mesh import make_scale_mesh
+from repro.models import shardctx
 from repro.models import sharding as shard_lib
 from repro.obs import stats as obs_stats
 from repro.obs import trace as obs_trace
@@ -454,7 +456,12 @@ def _build_single_run(fl: FLConfig, rounds: int, eval_every: int,
                 carry = (state, data_key, cum_time, acct, sched)
             return carry, trace
 
-        params = spec.init(jax.random.fold_in(key, 0))
+        # param_axes sharding hook: identity outside a shardctx context
+        # (every unsharded program lowers unchanged); under the context
+        # run_fl_population installs for over-budget models, this seeds the
+        # GSPMD layout of the whole round scan from the spec's declared
+        # logical axes.
+        params = spec.constrain_params(spec.init(jax.random.fold_in(key, 0)))
         state = rounds_lib.init_round_state(
             params, fl, jax.random.fold_in(key, 1), n_clients=n_clients,
             data_size=data_size, data_quality=data_quality,
@@ -894,7 +901,9 @@ def _build_population_run(fl: FLConfig, rounds: int, eval_every: int,
                 carry = (state, data_key, cum_time, acct, sched)
             return carry, trace
 
-        params = spec.init(jax.random.fold_in(key, 0))
+        # param_axes sharding hook (see _build_single_run): a no-op unless
+        # run_fl_population traced this program under a shardctx context
+        params = spec.constrain_params(spec.init(jax.random.fold_in(key, 0)))
         state = rounds_lib.init_round_state(
             params, fl, jax.random.fold_in(key, 1), n_clients=n_clients,
             data_size=pop.data_size, data_quality=pop.data_quality,
@@ -927,17 +936,19 @@ def _build_population_run(fl: FLConfig, rounds: int, eval_every: int,
 
 def _get_population_runner(fl: FLConfig, rounds: int, eval_every: int,
                            meta: DataMeta, n_lanes: int, pop: Population,
-                           sel_chunks: int):
+                           sel_chunks: int, model_shard_key=None):
     """Compiled ``runner(keys[L], pop, params_lanes[L])`` for the population
     engine.  Shares ``_RUNNER_CACHE``/``RUNNER_STATS`` with the dense sweep
     engine (a "pop" tag keeps the key spaces disjoint), so the
     single-compile property is asserted the same way: one miss per
     (statics, rounds, cadence, shapes, chunk policy), hits thereafter.
     ``sel_chunks`` is part of the key — it changes the lowered selection
-    loop (bitwise-neutral, but a different program)."""
+    loop (bitwise-neutral, but a different program).  ``model_shard_key``
+    (the mesh layout when the param_axes hook is armed, else None) is part
+    of the key too: the sharded-model trace is a different program."""
     static = fl_static(fl)
     cache_key = ("pop", static, rounds, eval_every, meta, n_lanes,
-                 pop.shapes(), int(sel_chunks))
+                 pop.shapes(), int(sel_chunks), model_shard_key)
     runner = _RUNNER_CACHE.get(cache_key)
     if runner is None:
         RUNNER_STATS["misses"] += 1
@@ -973,6 +984,7 @@ def run_fl_population(
     shard: bool = True,
     sel_chunks: Optional[int] = None,
     memory_budget_bytes: Optional[int] = None,
+    model_replicated_max_bytes: Optional[int] = None,
 ) -> List[List[RunResult]]:
     """Population-scale front door: a hyper-parameter sweep over a
     100k+-client :class:`Population` as ONE compiled program.
@@ -998,8 +1010,18 @@ def run_fl_population(
     * **auto-chunking policy** — when ``memory_budget_bytes`` is given,
       ``core/scale.auto_chunks`` sizes the selection chunk count so the
       [N]-shaped selection transients fit the per-device budget left
-      after the resident population state (DESIGN.md §7).  Chunked and
-      unchunked selection are bitwise identical.
+      after the resident population state + per-lane model replicas
+      (DESIGN.md §7).  Chunked and unchunked selection are bitwise
+      identical.
+    * **model-sharding hook** — a detector whose ``param_bytes()``
+      exceeds ``model_replicated_max_bytes`` (default
+      ``core/scale.MODEL_REPLICATED_MAX_BYTES``) and declares
+      ``ModelSpec.param_axes`` is traced under
+      ``shardctx.sharding_ctx(RULES_MODEL_SCALE, mesh)``: its wide
+      parameter axes tensor-parallel over the ``client`` mesh axis
+      instead of replicating per lane.  History columns match the
+      replicated run up to GSPMD reduction order
+      (tests/test_models.py pins this on a 4-device mesh).
 
     ``fedl2p`` is rejected: its per-client personalisation pass is O(N)
     host work, which is exactly what this engine exists to avoid.
@@ -1022,10 +1044,14 @@ def run_fl_population(
         return []
     n_lanes = len(cells) * len(seeds)
 
+    meta = meta_for(pop, hidden=hidden)
+    spec = get_model_spec(fl.model, meta)
+    model_bytes = spec.param_bytes()
+
     if sel_chunks is None:
         sel_chunks = 1 if memory_budget_bytes is None else scale_lib.auto_chunks(
             pop.n_clients, int(memory_budget_bytes),
-            pop.members_per_client, n_lanes)
+            pop.members_per_client, n_lanes, model_bytes=model_bytes)
 
     mesh = make_scale_mesh(n_lanes, shape=mesh_shape) if shard else None
     n_padded = n_lanes
@@ -1033,10 +1059,25 @@ def run_fl_population(
         lane_size = mesh.shape["lane"]
         n_padded = -(-n_lanes // lane_size) * lane_size
 
+    # ModelSpec sharding hook: when the detector's replicated parameter
+    # footprint exceeds the budget (core/scale.py) AND the spec declares
+    # param_axes, trace the runner under the RULES_MODEL_SCALE context so
+    # the spec's constrain_params calls tensor-parallel the model over the
+    # mesh's client axis.  The decision is part of the runner-cache key —
+    # sharded and replicated traces are different programs.
+    model_ctx = contextlib.nullcontext()
+    model_shard_key = None
+    if (mesh is not None and mesh.shape["client"] > 1
+            and spec.param_axes is not None
+            and scale_lib.model_needs_sharding(model_bytes,
+                                               model_replicated_max_bytes)):
+        model_ctx = shardctx.sharding_ctx(shard_lib.RULES_MODEL_SCALE, mesh)
+        model_shard_key = tuple(sorted(mesh.shape.items()))
+
     t0 = time.time()
-    meta = meta_for(pop, hidden=hidden)
     runner = _get_population_runner(fl, rounds, eval_every, meta, n_padded,
-                                    pop, sel_chunks)
+                                    pop, sel_chunks,
+                                    model_shard_key=model_shard_key)
     keys = jax.vmap(jax.random.key)(
         jnp.asarray(np.tile(seeds, len(cells)), jnp.uint32))
     lanes = _params_lanes(cells, len(seeds))
@@ -1059,7 +1100,8 @@ def run_fl_population(
             rep = NamedSharding(mesh, PartitionSpec())
             pop = jax.device_put(pop, jax.tree.map(lambda _: rep, pop))
 
-    params_b, sim_b, trace_b = runner(keys, pop, lanes)
+    with model_ctx:
+        params_b, sim_b, trace_b = runner(keys, pop, lanes)
     jax.block_until_ready(sim_b)
     wall_per_lane = (time.time() - t0) / max(n_lanes, 1)
 

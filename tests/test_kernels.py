@@ -182,3 +182,40 @@ def test_rglru_matches_associative_scan_in_model():
     h1, _ = model_scan(a, x)
     h2, _ = ops.rglru_scan(a, x)
     np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "b,l,w,h0",
+    [
+        (1, 128, 128, False),
+        (2, 64, 96, True),
+        (3, 64, 512, True),    # the ssm detector's flattened-state width
+        (1, 4, 512, False),    # few steps, wide lanes (chunk-state shape)
+    ],
+)
+def test_rglru_scan_pallas_bitwise_vs_ref(b, l, w, h0):
+    """ISSUE 10 kernel-parity pin: the Pallas chunked scan and the
+    sequential ``kernels.ref`` oracle run the SAME f32 ``h = a·h + x``
+    recurrence in the same order, so the two score routes of the sequence
+    detectors are BITWISE equal on the forward pass — not merely close."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    a = jax.nn.sigmoid(_rand(k1, (b, l, w), jnp.float32))
+    x = _rand(k2, (b, l, w), jnp.float32)
+    h0v = _rand(k3, (b, w), jnp.float32) if h0 else None
+    h, hl = ops.rglru_scan(a, x, h0v)
+    rh, rhl = R.rglru_scan_ref(a, x, h0v)
+    assert np.array_equal(np.asarray(h), np.asarray(rh))
+    assert np.array_equal(np.asarray(hl), np.asarray(rhl))
+
+
+def test_rglru_scan_interpret_auto_resolve():
+    """``interpret=None`` resolves by backend like the flash kernels: on
+    CPU it must take the interpret-mode path (and agree with an explicit
+    interpret=True bitwise) instead of trying to compile Pallas TPU code."""
+    k1, k2 = jax.random.split(KEY)
+    a = jax.nn.sigmoid(_rand(k1, (2, 64, 64), jnp.float32))
+    x = _rand(k2, (2, 64, 64), jnp.float32)
+    h_auto, hl_auto = ops.rglru_scan(a, x)                  # interpret=None
+    h_exp, hl_exp = ops.rglru_scan(a, x, interpret=True)
+    assert np.array_equal(np.asarray(h_auto), np.asarray(h_exp))
+    assert np.array_equal(np.asarray(hl_auto), np.asarray(hl_exp))

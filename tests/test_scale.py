@@ -218,16 +218,19 @@ def test_auto_chunk_boundary_bitwise(pop64):
     generous budget stays at 1 chunk — and the results are bitwise equal,
     because chunking only reshapes the selection working set."""
     n, m, lanes = 64, 16, 2
-    resident = scale_lib.population_resident_bytes(n, m, lanes)
+    fl = _small_fl()
+    # resident now includes one model replica per lane (ISSUE 10) — budget
+    # with the same spec.param_bytes() the driver feeds auto_chunks
+    from repro.models.spec import get_model_spec, meta_for
+    mb = get_model_spec(fl.model, meta_for(pop64, hidden=64)).param_bytes()
+    resident = scale_lib.population_resident_bytes(n, m, lanes, mb)
     transient = scale_lib.selection_transient_bytes(n)
     tight = resident + transient // 4          # forces ceil(transient/free) > 1
     roomy = resident + 10 * transient
-    assert scale_lib.auto_chunks(n, roomy, m, lanes) == 1
-    assert scale_lib.auto_chunks(n, tight, m, lanes) > 1
+    assert scale_lib.auto_chunks(n, roomy, m, lanes, model_bytes=mb) == 1
+    assert scale_lib.auto_chunks(n, tight, m, lanes, model_bytes=mb) > 1
     with pytest.raises(ValueError, match="resident"):
-        scale_lib.auto_chunks(n, resident, m, lanes)
-
-    fl = _small_fl()
+        scale_lib.auto_chunks(n, resident, m, lanes, model_bytes=mb)
     r1 = fl_driver.run_fl_population(pop64, fl, seeds=(0, 1), rounds=6,
                                      eval_every=3,
                                      memory_budget_bytes=roomy)

@@ -187,6 +187,29 @@ def test_engine_bitwise_attn_both_routes(fed_road):
         assert np.array_equal(eng.score(x), ref), route
 
 
+def test_engine_bitwise_ssm_stream_both_routes(fed_road):
+    """ISSUE 10: the Mamba-2 detector's full streaming path —
+    ``score_stream`` over uneven chunks through bucket batching and the
+    double-buffered feed — is bitwise against the compiled single-shot
+    reference on BOTH kernel routes ('kernel' = the rglru_scan Pallas
+    inter-chunk recurrence, 'ref' = the kernels/ref oracle)."""
+    params = _train(fed_road, "ssm")
+    meta = meta_for(fed_road)
+    spec = get_model_spec("ssm", meta)
+    x = np.asarray(fed_road.test_x[:21], np.float32)
+    for route in ("kernel", "ref"):
+        eng = ServeEngine(spec, meta, params, buckets=(4, 16), route=route)
+        ref = _ref_scores(spec, params, x, route)
+        rep = eng.score_stream([x[i:i + 8] for i in range(0, 21, 8)])
+        assert np.array_equal(rep.scores, ref), route
+        assert rep.n_windows == 21
+    # and the two routes agree with each other bit-for-bit: the inter-chunk
+    # scan is the same sequential f32 recurrence in both implementations
+    k = _ref_scores(spec, params, x, "kernel")
+    r = _ref_scores(spec, params, x, "ref")
+    assert np.array_equal(k, r)
+
+
 def test_engine_rejects_unknown_route(fed_road):
     meta = meta_for(fed_road)
     spec = get_model_spec("attn", meta)

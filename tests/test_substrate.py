@@ -200,3 +200,115 @@ def test_rolling_cache_matches_full_cache_within_window():
     np.testing.assert_allclose(np.asarray(full, np.float32),
                                np.asarray(stepwise, np.float32),
                                atol=2e-2, rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD vs the naive per-timestep recurrence (ISSUE 10)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # local containers without the wheel: seeded sweeps
+    HAVE_HYPOTHESIS = False
+
+from repro.models import ssm as ssm_lib
+
+
+def _ssd_naive(x, dt, A, B, C, s0=None):
+    """The O(L)-step recurrent oracle (ssd_decode_step's math, batched):
+    S_t = exp(-A dt_t)·S_{t-1} + dt_t·(x_t ⊗ B_t);  y_t = C_t · S_t."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    s = jnp.zeros((b, h, p, n), jnp.float32) if s0 is None else s0
+    ys = []
+    for t in range(l):
+        dA = jnp.exp(-A * dt[:, t])  # [b, h]
+        s = s * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t], s))
+    return jnp.stack(ys, axis=1), s
+
+
+def _ssd_case(rng):
+    """Random dims exercising chunk boundaries: l is a multiple of several
+    candidate chunk sizes, so chunk ∈ {1 (pure recurrence), l (pure
+    quadratic), divisors in between (boundary crossings)}."""
+    b = int(rng.integers(1, 3))
+    l = int(rng.choice([4, 8, 12, 16]))
+    h = int(rng.integers(1, 3))
+    p = int(rng.integers(1, 5))
+    n = int(rng.integers(1, 5))
+    divs = [q for q in (1, 2, 3, 4, 6, 8, 12, 16) if l % q == 0]
+    chunk = int(rng.choice(divs))
+    with_state = bool(rng.random() < 0.5)
+    seed = int(rng.integers(0, 2**31 - 1))
+    return b, l, h, p, n, chunk, with_state, seed
+
+
+def _check_ssd_chunked_case(b, l, h, p, n, chunk, with_state, seed):
+    keys = jax.random.split(jax.random.key(seed), 6)
+    x = jax.random.normal(keys[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h), jnp.float32))
+    A = jnp.exp(jax.random.uniform(keys[2], (h,), jnp.float32,
+                                   minval=0.0, maxval=2.0))
+    B = jax.random.normal(keys[3], (b, l, n), jnp.float32)
+    C = jax.random.normal(keys[4], (b, l, n), jnp.float32)
+    s0 = (jax.random.normal(keys[5], (b, h, p, n), jnp.float32)
+          if with_state else None)
+    y, fin = ssm_lib.ssd_chunked(x, dt, A, B, C, chunk, s0)
+    ry, rfin = _ssd_naive(x, dt, A, B, C, s0)
+    # quadratic masked form vs sequential recurrence: same math, different
+    # association — tight allclose, not bitwise
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(rfin),
+                               atol=2e-4, rtol=2e-4)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(0, 2**31 - 1))
+    def test_ssd_chunked_matches_naive_recurrence(case_seed):
+        _check_ssd_chunked_case(
+            *_ssd_case(np.random.default_rng(case_seed)))
+
+else:
+
+    def test_ssd_chunked_matches_naive_recurrence():
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            _check_ssd_chunked_case(*_ssd_case(rng))
+
+
+def test_ssd_chunked_chunk_boundary_and_init_state_pins():
+    """Deterministic pins for the cases that have regressed elsewhere in
+    the literature: a chunk boundary mid-sequence (inter-chunk recurrence
+    must carry decayed state) and a nonzero init_state entering chunk 0."""
+    for chunk, with_state in [(4, False), (4, True), (1, True), (16, True)]:
+        _check_ssd_chunked_case(2, 16, 2, 3, 4, chunk, with_state, seed=123)
+
+
+def test_ssd_chunked_routed_scan_fn_bitwise():
+    """The routed inter-chunk recurrence (``chunk_scan_via`` over the
+    rglru_scan kernel/ref primitives — the ssm detector's two score
+    routes) must be BITWISE equal to the inline ``lax.scan`` it replaces:
+    same sequential f32 ``s = dec·s + st``, only the carrier differs."""
+    from repro.kernels import ops as kops
+    from repro.kernels import ref as kref
+
+    keys = jax.random.split(jax.random.key(11), 6)
+    b, l, h, p, n, chunk = 2, 16, 2, 4, 4, 4
+    x = jax.random.normal(keys[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h), jnp.float32))
+    A = jnp.exp(jax.random.uniform(keys[2], (h,), jnp.float32, maxval=2.0))
+    B = jax.random.normal(keys[3], (b, l, n), jnp.float32)
+    C = jax.random.normal(keys[4], (b, l, n), jnp.float32)
+    s0 = jax.random.normal(keys[5], (b, h, p, n), jnp.float32)
+    y0, f0 = ssm_lib.ssd_chunked(x, dt, A, B, C, chunk, s0)
+    for prim in (kref.rglru_scan_ref, kops.rglru_scan):
+        y1, f1 = ssm_lib.ssd_chunked(x, dt, A, B, C, chunk, s0,
+                                     scan_fn=ssm_lib.chunk_scan_via(prim))
+        assert np.array_equal(np.asarray(y0), np.asarray(y1))
+        assert np.array_equal(np.asarray(f0), np.asarray(f1))

@@ -67,6 +67,10 @@ SCHEMAS = {
         "grid[].warm_execute_s_all[]": NUM,
         "grid[].runner_compiles": int,
         "road_raw_auc.window_native_matches_or_beats_mlp": bool,
+        "road_raw_auc.cnn": NUM,
+        "road_raw_auc.best_sequence": NUM,
+        "road_raw_auc.best_sequence_model": str,
+        "road_raw_auc.sequence_beats_cnn": bool,
         "road_raw_auc.gated": bool,
     },
     "BENCH_privacy.json": {
